@@ -1,0 +1,118 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, three per-device time terms on TPU v5e:
+
+    compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective = wire_bytes / ICI_bw             (~50 GB/s/link)
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N·D (forward) with N = active
+params, and the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat /
+padding / capacity-factor waste).  The dominant term is the bottleneck the
+perf loop iterates on.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def model_flops_global(arch_id: str, shape: str) -> float:
+    """Analytic useful FLOPs for the whole step (all devices)."""
+    from repro.configs import get_arch
+    arch = get_arch(arch_id)
+    cfg = arch.cfg
+    case = arch.shapes[shape]
+    if arch.family == "lm":
+        n_act = cfg.active_param_count()
+        if case.kind == "train":
+            return 6.0 * n_act * case.batch * case.seq_len
+        if case.kind == "prefill":
+            return 2.0 * n_act * case.batch * case.seq_len
+        return 2.0 * n_act * case.batch          # decode: one token each
+    if arch.family == "diffusion":
+        n = cfg.param_count()
+        toks = cfg.n_tokens(case.img_res) * case.batch
+        factor = 6.0 if case.kind == "train" else 2.0
+        return factor * n * toks
+    # vision: 6/2 · N · images is a crude proxy (convs reuse weights
+    # spatially, so HLO_FLOPs >> 6·N·D is EXPECTED for convnets — noted)
+    n = cfg.param_count()
+    factor = 6.0 if case.kind == "train" else 2.0
+    return factor * n * case.batch
+
+
+def load_cells(dryrun_dir: str, mesh: str = "single",
+               variant: str = "baseline"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(
+            dryrun_dir, f"*__{mesh}__{variant}.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            if r.get("status") == "skipped":
+                rows.append({"arch": r["arch"], "shape": r["shape"],
+                             "mesh": mesh, "variant": variant,
+                             "skipped": r["reason"]})
+            continue
+        nd = r["n_devices"]
+        c = r["cost"]
+        compute_s = c["flops"] / PEAK
+        memory_s = c["bytes accessed"] / HBM
+        coll_s = c["wire_bytes"] / ICI
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops_global(r["arch"], r["shape"]) / nd
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": mesh,
+            "variant": variant, "n_devices": nd,
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant,
+            "model_flops_per_dev": mf,
+            "useful_ratio": mf / max(c["flops"], 1e-9),
+            "roofline_fraction": max(compute_s, 1e-12) / max(
+                sum(terms.values()), 1e-12),
+            "step_time_bound_s": max(terms.values()),
+            "hbm_args_gb": r["memory"]["argument_size_in_bytes"] / 1e9,
+            "hbm_temp_gb": r["memory"]["temp_size_in_bytes"] / 1e9,
+        })
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | 6ND/HLO | args GB | temp GB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skip | — | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['hbm_args_gb']:.2f} | {r['hbm_temp_gb']:.2f} |\n")
+    return "".join(out)
+
+
+def main():
+    dryrun_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+    rows = load_cells(dryrun_dir, mesh)
+    print(markdown_table(rows))
+    runnable = [r for r in rows if "skipped" not in r]
+    print(f"\n{len(runnable)} cells; dominant-term histogram:",
+          {k: sum(r['dominant'] == k for r in runnable)
+           for k in ("compute", "memory", "collective")})
+
+
+if __name__ == "__main__":
+    main()

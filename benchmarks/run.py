@@ -1,0 +1,98 @@
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (benchmarks/figures.py) + kernel
+micro-benchmarks + the roofline summary from the dry-run artifacts.
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, n=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def kernel_microbench():
+    rows = []
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.qtransfer.ops import qtransfer
+    from repro.kernels.blockdct.ops import blockdct_quantize
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    us = _timeit(lambda: flash_attention(q, k, v, interpret=True), n=2)
+    rows.append(("kernel_flash_attention_interp", us, "B1S256H4D64"))
+    anchor = jax.random.uniform(ks[0], (64, 96), jnp.float32) * 255
+    mv = jax.random.randint(ks[1], (4, 6, 2), -8, 9, jnp.int32)
+    resid = jnp.zeros((64, 96), jnp.float32)
+    us = _timeit(lambda: qtransfer(anchor, mv, resid, interpret=True), n=2)
+    rows.append(("kernel_qtransfer_interp", us, "64x96"))
+    blocks = jax.random.uniform(ks[2], (256, 8, 8), jnp.float32) * 255 - 128
+    us = _timeit(lambda: blockdct_quantize(blocks, 50.0, interpret=True),
+                 n=2)
+    rows.append(("kernel_blockdct_interp", us, "256blocks"))
+    return rows
+
+
+def codec_bench():
+    from repro.codec.video_codec import VideoCodecConfig, encode_chunk
+    from repro.sim.video_source import StreamConfig, generate_chunk
+    frames, _, _ = generate_chunk(jax.random.PRNGKey(0),
+                                  StreamConfig(height=64, width=96), 0, 4)
+    cfg = VideoCodecConfig()
+    fn = jax.jit(encode_chunk, static_argnums=1)
+    us = _timeit(lambda: fn(frames, cfg), n=3)
+    return [("codec_encode_chunk_4f_64x96", us, "mv+dct+bits")]
+
+
+def roofline_summary():
+    from benchmarks.roofline import load_cells
+    rows = []
+    for mesh in ("single", "multi"):
+        cells = load_cells("experiments/dryrun", mesh)
+        runnable = [c for c in cells if "skipped" not in c]
+        if not runnable:
+            continue
+        dom = {k: sum(c["dominant"] == k for c in runnable)
+               for k in ("compute", "memory", "collective")}
+        rows.append((f"roofline_{mesh}_cells", len(runnable) * 1.0,
+                     f"dominant:{dom}".replace(",", ";")))
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    all_rows = []
+    t0 = time.time()
+    from benchmarks.figures import ALL
+    for name, fn in ALL.items():
+        try:
+            all_rows.extend(fn())
+        except Exception as e:  # keep the harness robust
+            all_rows.append((name, -1.0, f"ERROR:{type(e).__name__}:{e}"))
+    all_rows.extend(kernel_microbench())
+    all_rows.extend(codec_bench())
+    all_rows.extend(roofline_summary())
+    for name, us, derived in all_rows:
+        if isinstance(us, float):
+            print(f"{name},{us:.1f},{derived}")
+        else:
+            print(f"{name},{us},{derived}")
+    print(f"# total wall: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

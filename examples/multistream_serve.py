@@ -1,0 +1,14 @@
+"""Multi-stream serving example (the paper's headline scenario).
+
+    PYTHONPATH=src python examples/multistream_serve.py --streams 4
+
+Runs the full edge runtime — hybrid codec, 3 pipelines with batched DNN
+execution, admission control, bandwidth allocation — over a shared FCC-
+style uplink.  See src/repro/launch/serve.py for the flag set.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--streams", "4", "--chunks", "4"])

@@ -1,0 +1,78 @@
+"""End-to-end training driver: train the detection DNN on synthetic
+surveillance streams for a few hundred steps, with checkpointing.
+
+    PYTHONPATH=src python examples/train_detector.py --steps 300
+
+This is the 'train a ~100M model for a few hundred steps'-class driver
+scaled to the CPU container (TinyDetector ~30k params; swap in any vision
+backbone from src/repro/configs for the full-size path — see
+launch/train.py and the dry-run for the production mesh versions).
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models import detection as D
+from repro.sim.video_source import StreamConfig, generate_chunk
+from repro.train import checkpoint as CKPT
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/biswift_detector")
+    ap.add_argument("--eval-every", type=int, default=100)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    cfg = D.TinyDetectorConfig()
+    params = D.init(key, cfg)
+    opt = init_state(params)
+    ocfg = AdamWConfig(lr=3e-3, weight_decay=0.0, warmup_steps=20,
+                       total_steps=args.steps)
+    streams = [
+        StreamConfig(height=64, width=96, n_objects=2, min_size=16,
+                     max_size=28, seed=7),
+        StreamConfig(height=64, width=96, n_objects=5, min_size=12,
+                     max_size=20, seed=8, speed=2.5),
+    ]
+
+    @jax.jit
+    def step(params, opt, frames, boxes, valid):
+        loss, g = jax.value_and_grad(
+            lambda p: D.loss_fn(p, cfg, frames, boxes, valid))(params)
+        params, opt, m = apply_updates(params, g, opt, ocfg)
+        return params, opt, loss
+
+    nms = jax.jit(lambda b, s: D.greedy_nms(b, s, iou_thresh=0.4, top_k=16))
+
+    def evaluate(params):
+        f1s = []
+        for sc in streams:
+            frames, boxes, valid = generate_chunk(key, sc, 50_000, 4)
+            raw = D.forward(params, cfg, frames)
+            pb, ps = D.decode_boxes(raw, cfg)
+            for i in range(4):
+                bb, ss = nms(pb[i], ps[i])
+                f1s.append(float(D.f1_score(bb, ss, boxes[i], valid[i])))
+        return float(np.mean(f1s))
+
+    print(f"initial F1: {evaluate(params):.3f}")
+    t0 = time.time()
+    for i in range(args.steps):
+        sc = streams[i % len(streams)]
+        frames, boxes, valid = generate_chunk(key, sc, i * 4, 4)
+        params, opt, loss = step(params, opt, frames, boxes, valid)
+        if (i + 1) % args.eval_every == 0:
+            f1 = evaluate(params)
+            print(f"step {i + 1}: loss {float(loss):.4f}  F1 {f1:.3f}  "
+                  f"({(i + 1) / (time.time() - t0):.1f} steps/s)")
+            CKPT.save(args.ckpt_dir, i + 1, params)
+    print(f"checkpoints in {args.ckpt_dir}: steps {CKPT.all_steps(args.ckpt_dir)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.baselines.policies import (  # noqa: F401
+    run_accdecoder, run_biswift, run_neuroscaler, run_reducto, BASELINES,
+)

@@ -1,0 +1,206 @@
+"""Baseline VAPs re-implemented for comparison (paper §VI-A):
+
+  * AccDecoder [28] — DRL frame classification + super-resolution
+    enhancement of LR video on the edge (no HD anchors; SR compute cost).
+  * Reducto [6] — camera-side frame filtering by a learned diff threshold;
+    sent frames get full inference, filtered frames reuse the last result.
+  * NeuroScaler* [25] — selective SR on anchor frames, reuse elsewhere
+    (extended for analytics per the paper).
+  * BiSwift — our system (hybrid codec + 3 pipelines).
+
+All four run on the same analytic accuracy backend and latency model as
+the env, so benchmark deltas isolate the *policy*, exactly like the
+paper's even-bandwidth-for-baselines protocol.  Per-frame edge costs:
+inference 33 ms; SR ~80 ms/frame (the paper's motivation for avoiding
+per-frame SR); reuse 6 ms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.codec.rate_model import QUALITY_LADDER, ladder_for_bandwidth
+from repro.core.classification import classify_frames
+from repro.sim.env import analytic_f1
+
+f32 = np.float32
+
+COST_INFER = 0.033
+COST_SR = 0.080
+COST_REUSE = 0.006
+COST_TRANSFER = 0.010
+
+
+def _features(frames):
+    fd = np.abs(np.diff(frames, axis=0)).mean(axis=(1, 2)) / 255.0
+    return np.concatenate([[0.0], fd])
+
+
+def _video_bits(level: int, T: int, fps: float) -> float:
+    return QUALITY_LADDER[level].bitrate_kbps * 1000.0 * (T / fps)
+
+
+def _result(name, accs, t_comp, bits, bw_kbps, T, fps, n_infer,
+            t_gpu=None):
+    t_trans = bits / max(bw_kbps * 1000.0, 1e-6)
+    return {"policy": name, "accuracy": float(np.mean(accs)),
+            "latency": t_trans + t_comp, "t_trans": t_trans,
+            "t_comp": t_comp, "bits": bits, "n_infer": n_infer,
+            # GPU-side time only: the paper runs reuse + DRL on CPU (§VII)
+            "t_gpu": t_comp if t_gpu is None else t_gpu,
+            "utilization": min(bits / max(bw_kbps * 1000.0 * (T / fps),
+                                          1e-6), 1.0)}
+
+
+
+def _reuse_decay(since: float, speed: float) -> float:
+    """Pipeline-3 decay (paper Fig. 8b): boxes shift by mean MV; accuracy
+    degrades with motion and distance from the last inference."""
+    return max(1.0 - 0.03 * speed * since, 0.3)
+
+def run_biswift(frames, boxes, valid, bw_kbps, stream_cfg, *,
+                tr1=0.05, tr2=0.10, fps=30.0):
+    T = frames.shape[0]
+    fd = _features(frames)
+    rm = fd * 0.8 + 0.02
+    types = np.asarray(classify_frames(jnp.asarray(fd), jnp.asarray(rm),
+                                       tr1, tr2)[0]).copy()
+    # adaptive split (paper §IV-A): anchors and video SHARE the stream's
+    # allocation.  Charge actual anchor bits; if the agent requested more
+    # anchors than the link affords, demote the excess to the transfer
+    # pipeline (the accuracy-first policy keeps them sparse, 7-8%).
+    chunk_s = T / fps
+    budget_bits = bw_kbps * 1000.0 * chunk_s
+    level0 = ladder_for_bandwidth(bw_kbps)
+    video_floor = QUALITY_LADDER[0].bitrate_kbps * 1000.0 * chunk_s
+    afford = max(int((budget_bits - video_floor) / 45_000.0), 1)
+    anchor_ids = np.nonzero(types == 1)[0]
+    if len(anchor_ids) > afford:
+        for i in anchor_ids[afford:]:
+            types[i] = 2                     # demoted: transfer + infer
+    n_anchors = int((types == 1).sum())
+    anchor_kbps = n_anchors * 45.0 / chunk_s
+    level = ladder_for_bandwidth(max(bw_kbps - anchor_kbps, 0.0))
+    ql = QUALITY_LADDER[level]
+    obj = float(boxes[0, :, 2:].mean())
+    n = int(valid[0].sum())
+    accs, since, last = [], 0.0, 0.0
+    for ty in types:
+        if ty != 3:
+            since = 0.0
+            scale = 1.0 if ty == 1 else ql.scale
+            qual = 80.0 if ty == 1 else ql.quality
+            last = analytic_f1(scale, qual, obj, n, int(ty), 0.0,
+                               stream_cfg.speed)
+            accs.append(last)
+        else:
+            since += 1.0
+            accs.append(last * _reuse_decay(since, stream_cfg.speed))
+    n1, n2, n3 = [(types == k).sum() for k in (1, 2, 3)]
+    t_comp = n1 * COST_INFER + n2 * (COST_INFER + COST_TRANSFER) \
+        + n3 * COST_REUSE
+    bits = _video_bits(level, T, fps) + n1 * 45_000.0
+    return _result("biswift", accs, t_comp, bits, bw_kbps, T, fps,
+                   int(n1 + n2),
+                   t_gpu=n1 * COST_INFER + n2 * (COST_INFER + COST_TRANSFER))
+
+
+def run_accdecoder(frames, boxes, valid, bw_kbps, stream_cfg, *,
+                   anchor_frac=0.26, fps=30.0):
+    """LR video only; anchors SR-enhanced then inferred; rest reused."""
+    T = frames.shape[0]
+    level = ladder_for_bandwidth(bw_kbps)      # all bandwidth to video
+    ql = QUALITY_LADDER[level]
+    obj = float(boxes[0, :, 2:].mean())
+    n = int(valid[0].sum())
+    n_anchor = max(int(round(anchor_frac * T)), 1)
+    anchor_every = max(T // n_anchor, 1)
+    accs, since, last = [], 0.0, 0.0
+    n_inf = 0
+    for t in range(T):
+        if t % anchor_every == 0:
+            since = 0.0
+            n_inf += 1
+            # SR roughly doubles effective scale, capped at 1
+            sr_scale = min(ql.scale * 2.0, 1.0) * 0.92  # SR artifacts
+            last = analytic_f1(sr_scale, ql.quality, obj, n, 1, 0.0,
+                               stream_cfg.speed)
+            accs.append(last)
+        else:
+            since += 1.0
+            accs.append(last * _reuse_decay(since, stream_cfg.speed))
+    t_comp = n_inf * (COST_SR + COST_INFER) + (T - n_inf) * COST_REUSE
+    bits = _video_bits(level, T, fps)
+    return _result("accdecoder", accs, t_comp, bits, bw_kbps, T, fps,
+                   n_inf, t_gpu=n_inf * (COST_SR + COST_INFER))
+
+
+def run_reducto(frames, boxes, valid, bw_kbps, stream_cfg, *,
+                diff_thresh=0.03, fps=30.0):
+    """Camera-side filtering: frames below the diff threshold are dropped."""
+    T = frames.shape[0]
+    fd = _features(frames)
+    sent = (fd > diff_thresh)
+    sent[0] = True
+    frac_sent = float(sent.mean())
+    # rate control reacts with delay: the effective ladder boost from
+    # dropping frames is capped (cannot assume perfect foresight)
+    level = ladder_for_bandwidth(bw_kbps / max(frac_sent, 0.6))
+    ql = QUALITY_LADDER[level]
+    obj = float(boxes[0, :, 2:].mean())
+    n = int(valid[0].sum())
+    accs, since, last = [], 0.0, 0.0
+    for t in range(T):
+        if sent[t]:
+            since = 0.0
+            last = analytic_f1(ql.scale, ql.quality, obj, n, 1, 0.0,
+                               stream_cfg.speed)
+            accs.append(last)
+        else:
+            since += 1.0
+            accs.append(last * _reuse_decay(since, stream_cfg.speed))
+    n_inf = int(sent.sum())
+    t_comp = n_inf * COST_INFER + (T - n_inf) * COST_REUSE
+    bits = _video_bits(level, T, fps) * frac_sent
+    return _result("reducto", accs, t_comp, bits, bw_kbps, T, fps, n_inf,
+                   t_gpu=n_inf * COST_INFER)
+
+
+def run_neuroscaler(frames, boxes, valid, bw_kbps, stream_cfg, *,
+                    anchor_frac=0.26, fps=30.0):
+    """Selective SR on anchors (QoE->analytics extension: infer anchors,
+    reuse elsewhere)."""
+    T = frames.shape[0]
+    level = ladder_for_bandwidth(bw_kbps)
+    ql = QUALITY_LADDER[level]
+    obj = float(boxes[0, :, 2:].mean())
+    n = int(valid[0].sum())
+    n_anchor = max(int(round(anchor_frac * T)), 1)
+    anchor_every = max(T // n_anchor, 1)
+    accs, since, last = [], 0.0, 0.0
+    n_inf = 0
+    for t in range(T):
+        if t % anchor_every == 0:
+            since = 0.0
+            n_inf += 1
+            sr_scale = min(ql.scale * 2.0, 1.0) * 0.90
+            last = analytic_f1(sr_scale, ql.quality, obj, n, 1, 0.0,
+                               stream_cfg.speed)
+            accs.append(last)
+        else:
+            since += 1.0
+            accs.append(last * _reuse_decay(since, stream_cfg.speed))
+    t_comp = n_inf * (COST_SR + COST_INFER) + (T - n_inf) * COST_REUSE
+    bits = _video_bits(level, T, fps)
+    return _result("neuroscaler*", accs, t_comp, bits, bw_kbps, T, fps,
+                   n_inf, t_gpu=n_inf * (COST_SR + COST_INFER))
+
+
+BASELINES = {
+    "biswift": run_biswift,
+    "accdecoder": run_accdecoder,
+    "reducto": run_reducto,
+    "neuroscaler*": run_neuroscaler,
+}

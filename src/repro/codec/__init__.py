@@ -1,0 +1,5 @@
+from repro.codec.image_codec import jpeg_encode_decode, jpeg_bits  # noqa: F401
+from repro.codec.video_codec import (  # noqa: F401
+    VideoCodecConfig, encode_chunk, decode_chunk,
+)
+from repro.codec.rate_model import QUALITY_LADDER, ladder_for_bandwidth  # noqa: F401

@@ -1,0 +1,102 @@
+"""8×8 block DCT + quantization — the JPEG/H.264 transform core (pure JAX).
+
+The TPU-optimized tiled version lives in ``repro.kernels.blockdct``; this
+module is the reference implementation used by the codecs and as the kernel
+oracle.  DCT is expressed as two 8×8 matmuls (MXU-friendly by design).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+# Standard JPEG luminance quantization table (quality 50).
+JPEG_LUMA_Q50 = jnp.array([
+    [16, 11, 10, 16, 24, 40, 51, 61],
+    [12, 12, 14, 19, 26, 58, 60, 55],
+    [14, 13, 16, 24, 40, 57, 69, 56],
+    [14, 17, 22, 29, 51, 87, 80, 62],
+    [18, 22, 37, 56, 68, 109, 103, 77],
+    [24, 35, 55, 64, 81, 104, 113, 92],
+    [49, 64, 78, 87, 103, 121, 120, 101],
+    [72, 92, 95, 98, 112, 100, 103, 99],
+], f32)
+
+
+@functools.lru_cache()
+def dct_matrix(n: int = 8):
+    """Orthonormal DCT-II matrix D such that y = D @ x @ D.T.
+
+    Built with numpy so the cached constant is a host array (caching a jnp
+    array created under jit would leak a tracer).
+    """
+    import numpy as np
+    k = np.arange(n, dtype=np.float32)[:, None]
+    i = np.arange(n, dtype=np.float32)[None, :]
+    d = np.cos((2 * i + 1) * k * math.pi / (2 * n)) * math.sqrt(2.0 / n)
+    d[0] *= 1.0 / math.sqrt(2.0)
+    return d
+
+
+def quality_scale(quality) -> jnp.ndarray:
+    """JPEG quality-factor -> quant-table scale (Annex K convention)."""
+    q = jnp.clip(jnp.asarray(quality, f32), 1.0, 100.0)
+    return jnp.where(q < 50.0, 5000.0 / q, 200.0 - 2.0 * q) / 100.0
+
+
+def blockify(img, block: int = 8):
+    """(H, W) -> (H/b * W/b, b, b).  H, W must be multiples of b."""
+    H, W = img.shape
+    x = img.reshape(H // block, block, W // block, block)
+    return x.transpose(0, 2, 1, 3).reshape(-1, block, block)
+
+
+def unblockify(blocks, H: int, W: int, block: int = 8):
+    x = blocks.reshape(H // block, W // block, block, block)
+    return x.transpose(0, 2, 1, 3).reshape(H, W)
+
+
+def dct2(blocks):
+    D = dct_matrix(blocks.shape[-1])
+    return jnp.einsum("ij,njk,lk->nil", D, blocks.astype(f32), D)
+
+
+def idct2(coefs):
+    D = dct_matrix(coefs.shape[-1])
+    return jnp.einsum("ji,njk,kl->nil", D, coefs.astype(f32), D)
+
+
+def quantize(coefs, quality):
+    qtab = JPEG_LUMA_Q50 * quality_scale(quality)
+    qtab = jnp.maximum(qtab, 1.0)
+    return jnp.round(coefs / qtab), qtab
+
+
+def dequantize(qcoefs, qtab):
+    return qcoefs * qtab
+
+
+def entropy_bits(qcoefs) -> jnp.ndarray:
+    """Bit-cost proxy: exp-Golomb-style 2*log2(1+|q|)+1 per nonzero coef.
+
+    Calibrated against the paper's 5-level ladder in rate_model.py; the
+    proxy is monotone in quality and content complexity, which is what the
+    bandwidth controller needs.
+    """
+    a = jnp.abs(qcoefs)
+    bits = jnp.where(a > 0, 2.0 * jnp.log2(1.0 + a) + 1.0, 0.0)
+    return bits.sum() + qcoefs.shape[0] * 4.0  # per-block EOB overhead
+
+
+def transform_quantize(img, quality):
+    """Full round trip.  Returns (recon, bits)."""
+    H, W = img.shape
+    blocks = blockify(img.astype(f32) - 128.0)
+    q, qtab = quantize(dct2(blocks), quality)
+    bits = entropy_bits(q)
+    rec = unblockify(idct2(dequantize(q, qtab)), H, W) + 128.0
+    return jnp.clip(rec, 0.0, 255.0), bits

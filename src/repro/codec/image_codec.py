@@ -1,0 +1,42 @@
+"""JPEG-like HD image codec for BiSwift anchors (paper §IV-A, Fig. 3b).
+
+Anchors are delivered as high-definition stills whose quality factor is
+tuned so that anchors + video share the stream's allocated bandwidth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.codec import blockdct as B
+
+f32 = jnp.float32
+
+
+def jpeg_encode_decode(img, quality):
+    """img: (H, W) float [0,255] -> (recon, bits)."""
+    return B.transform_quantize(img, quality)
+
+
+def jpeg_bits(img, quality):
+    blocks = B.blockify(img.astype(f32) - 128.0)
+    q, _ = B.quantize(B.dct2(blocks), quality)
+    return B.entropy_bits(q)
+
+
+def psnr(a, b, peak: float = 255.0):
+    mse = jnp.mean(jnp.square(a.astype(f32) - b.astype(f32)))
+    return 10.0 * jnp.log10(peak * peak / jnp.maximum(mse, 1e-9))
+
+
+def quality_for_budget(img, bit_budget, qualities=(20., 35., 50., 65., 80., 92.)):
+    """Highest JPEG quality whose bit cost fits the budget (vectorized probe).
+
+    Mirrors the paper's camera-side adaptation: the hybrid encoder tunes the
+    anchor quality factor to the bandwidth share chosen by the agent.
+    """
+    qs = jnp.asarray(qualities, f32)
+    bits = jnp.stack([jpeg_bits(img, q) for q in qualities])
+    ok = bits <= bit_budget
+    idx = jnp.where(ok.any(), jnp.argmax(jnp.where(ok, qs, -1.0)), 0)
+    return qs[idx], bits[idx]

@@ -1,0 +1,93 @@
+"""Block motion estimation (16×16 macroblocks, full search ±R integer pel).
+
+Vectorized as a scan over candidate offsets: each step computes a shifted
+whole-frame SAD and block-sums it — JAX/TPU-friendly (no data-dependent
+gathers on the search path).  The warp (motion compensation) is the same
+block-gather primitive the hybrid decoder's quality transfer uses; its
+Pallas TPU kernel lives in ``repro.kernels.qtransfer``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+f32 = jnp.float32
+MB = 16  # macroblock size
+
+
+def _offsets(radius: int):
+    r = jnp.arange(-radius, radius + 1)
+    dy, dx = jnp.meshgrid(r, r, indexing="ij")
+    return jnp.stack([dy.reshape(-1), dx.reshape(-1)], axis=1)  # (K, 2)
+
+
+def block_sad(cur, ref, radius: int = 8):
+    """Returns (mv (nby, nbx, 2) int32, sad (nby, nbx) f32).
+
+    cur/ref: (H, W) with H, W multiples of 16.
+    """
+    H, W = cur.shape
+    nby, nbx = H // MB, W // MB
+    pad = radius
+    refp = jnp.pad(ref.astype(f32), pad, mode="edge")
+    cur = cur.astype(f32)
+    offs = _offsets(radius)
+
+    def step(carry, off):
+        best_sad, best_idx, idx = carry
+        dy, dx = off[0], off[1]
+        shifted = lax.dynamic_slice(refp, (pad + dy, pad + dx), (H, W))
+        diff = jnp.abs(cur - shifted)
+        sad = diff.reshape(nby, MB, nbx, MB).sum(axis=(1, 3))
+        better = sad < best_sad
+        best_sad = jnp.where(better, sad, best_sad)
+        best_idx = jnp.where(better, idx, best_idx)
+        return (best_sad, best_idx, idx + 1), None
+
+    init = (jnp.full((nby, nbx), jnp.inf, f32),
+            jnp.zeros((nby, nbx), jnp.int32), jnp.int32(0))
+    (best_sad, best_idx, _), _ = lax.scan(step, init, offs)
+    mv = offs[best_idx]  # (nby, nbx, 2)
+    return mv.astype(jnp.int32), best_sad
+
+
+def warp_blocks(ref, mv):
+    """Motion compensation: gather 16×16 blocks of ``ref`` at MV offsets.
+
+    ref: (H, W); mv: (nby, nbx, 2) int32 (dy, dx).  Pure-jnp oracle for the
+    qtransfer Pallas kernel.
+    """
+    H, W = ref.shape
+    nby, nbx = mv.shape[:2]
+    pad = int(jnp.maximum(jnp.abs(mv).max(), 0)) if mv.size and not isinstance(
+        mv, jax.core.Tracer) else None
+    # static padding: use worst-case radius from values' dtype bound is not
+    # static under jit -> pad by a fixed maximum supported radius.
+    R = 16
+    refp = jnp.pad(ref.astype(f32), R, mode="edge")
+
+    by = jnp.arange(nby) * MB
+    bx = jnp.arange(nbx) * MB
+
+    def gather_block(y0, x0, d):
+        return lax.dynamic_slice(refp, (y0 + R + d[0], x0 + R + d[1]),
+                                 (MB, MB))
+
+    rows = jax.vmap(
+        lambda y0, mvr: jax.vmap(
+            lambda x0, d: gather_block(y0, x0, d))(bx, mvr)
+    )(by, mv)                                     # (nby, nbx, MB, MB)
+    return rows.transpose(0, 2, 1, 3).reshape(H, W)
+
+
+def accumulate_mv(mvs):
+    """Chain per-frame MVs into anchor-relative MVs (paper Fig. 7).
+
+    mvs: (T, nby, nbx, 2) frame-to-previous-frame vectors.  Returns
+    anchor-relative vectors by summation — the first-order approximation of
+    following the codec reference index, adequate at small radii.
+    """
+    return jnp.cumsum(mvs, axis=0)

@@ -1,0 +1,69 @@
+"""The 5-level quality ladder of §VI-A and bandwidth->config selection.
+
+bitrate ∈ {500, 1000, 1500, 2000, 5000} kbps  <->
+resolution ∈ {270p, 360p, 540p, 720p, 1080p}
+
+In the simulation, resolutions are scale fractions of the raw source frame;
+the codec quality factor per level is calibrated so the bit proxy tracks
+the ladder ordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityLevel:
+    name: str
+    bitrate_kbps: float
+    scale: float          # fraction of raw resolution
+    quality: float        # codec quality factor
+
+
+QUALITY_LADDER = (
+    QualityLevel("270p", 500.0, 0.25, 30.0),
+    QualityLevel("360p", 1000.0, 1 / 3, 40.0),
+    QualityLevel("540p", 1500.0, 0.5, 50.0),
+    QualityLevel("720p", 2000.0, 2 / 3, 65.0),
+    QualityLevel("1080p", 5000.0, 1.0, 80.0),
+)
+
+
+def ladder_for_bandwidth(bw_kbps: float, headroom: float = 0.95) -> int:
+    """Highest ladder level whose bitrate fits within bw_kbps*headroom.
+
+    This is the 'adaptive feedback control' selection of §IV-A: the encoder
+    follows the bandwidth allocated by the controller.
+    """
+    level = 0
+    for i, ql in enumerate(QUALITY_LADDER):
+        if ql.bitrate_kbps <= bw_kbps * headroom:
+            level = i
+    return level
+
+
+def downscale(frames, scale: float):
+    """(T, H, W) average-pool downscale to a multiple-of-16 size."""
+    T, H, W = frames.shape
+    h = max(int(H * scale) // 16 * 16, 16)
+    w = max(int(W * scale) // 16 * 16, 16)
+    fy, fx = H // h, W // w
+    if fy * h != H or fx * w != W:
+        # crop to divisible region, then pool
+        frames = frames[:, : fy * h, : fx * w]
+    x = frames.reshape(T, h, fy, w, fx)
+    return x.mean(axis=(2, 4))
+
+
+def upscale_nearest(frames, H: int, W: int):
+    """(T, h, w) -> (T, H, W) nearest-neighbour (the cheap decoder upscale).
+
+    Index-mapped so non-integer factors (e.g. the 2/3-scale 720p level)
+    work exactly.
+    """
+    T, h, w = frames.shape
+    yi = jnp.clip(jnp.arange(H) * h // H, 0, h - 1)
+    xi = jnp.clip(jnp.arange(W) * w // W, 0, w - 1)
+    return frames[:, yi][:, :, xi]

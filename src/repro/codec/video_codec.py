@@ -1,0 +1,103 @@
+"""Block-based video codec simulation (I/P frames, MV + DCT-quant residual).
+
+Preserves exactly the codec features BiSwift consumes (paper §IV):
+  * 16×16 macroblock motion vectors and per-block residuals (quality
+    transfer + reuse pipelines),
+  * I/P frame structure and per-frame residual magnitudes (the R_f feature
+    accumulated for Eq. 3 classification and the DRL state),
+  * QP-style quantization with a bitrate proxy (rate_model.py calibrates
+    the 5-level ladder of §VI-A).
+
+All functions are jit/vmap-compatible; chunks are (T, H, W) luma in
+[0, 255].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.codec import blockdct as B
+from repro.codec import motion as M
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class VideoCodecConfig:
+    search_radius: int = 8
+    quality: float = 50.0        # quantizer quality factor (QP analogue)
+    gop: int = 30                # I-frame period
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EncodedChunk:
+    """Everything the edge receives for one chunk of one stream."""
+    recon: jnp.ndarray          # (T, H, W) decoder reconstruction
+    mv: jnp.ndarray             # (T, nby, nbx, 2) motion vectors (frame t-1 -> t)
+    residual_q: jnp.ndarray     # (T, nblocks, 8, 8) quantized residual coefs
+    qtab: jnp.ndarray           # (8, 8) quant table
+    bits: jnp.ndarray           # (T,) per-frame bit cost
+    residual_mag: jnp.ndarray   # (T,) mean |residual| per frame (R_f feature)
+    frame_diff: jnp.ndarray     # (T,) mean |frame_t - frame_{t-1}| (X_f feature)
+
+
+def _encode_iframe(frame, quality):
+    blocks = B.blockify(frame.astype(f32) - 128.0)
+    q, qtab = B.quantize(B.dct2(blocks), quality)
+    bits = B.entropy_bits(q)
+    rec = B.unblockify(B.idct2(B.dequantize(q, qtab)),
+                       *frame.shape) + 128.0
+    return jnp.clip(rec, 0.0, 255.0), q, qtab, bits
+
+
+def _encode_pframe(frame, ref_recon, cfg: VideoCodecConfig):
+    mv, _ = M.block_sad(frame, ref_recon, cfg.search_radius)
+    pred = M.warp_blocks(ref_recon, mv)
+    resid = frame.astype(f32) - pred
+    blocks = B.blockify(resid)
+    q, qtab = B.quantize(B.dct2(blocks), cfg.quality)
+    bits = B.entropy_bits(q) + mv.size * 3.0        # MV coding cost proxy
+    rec_resid = B.unblockify(B.idct2(B.dequantize(q, qtab)), *frame.shape)
+    rec = jnp.clip(pred + rec_resid, 0.0, 255.0)
+    return rec, mv, q, qtab, bits, jnp.mean(jnp.abs(resid))
+
+
+def encode_chunk(frames, cfg: VideoCodecConfig) -> EncodedChunk:
+    """frames: (T, H, W).  Frame 0 is the I-frame (chunks align to GOPs)."""
+    T, H, W = frames.shape
+    nby, nbx = H // M.MB, W // M.MB
+    rec0, q0, qtab, bits0 = _encode_iframe(frames[0], cfg.quality)
+
+    def step(carry, frame):
+        prev_rec = carry
+        rec, mv, q, _, bits, rmag = _encode_pframe(frame, prev_rec, cfg)
+        fdiff = jnp.mean(jnp.abs(frame - prev_rec))
+        return rec, (rec, mv, q, bits, rmag, fdiff)
+
+    _, (recs, mvs, qs, bits, rmags, fdiffs) = lax.scan(
+        step, rec0, frames[1:])
+    recon = jnp.concatenate([rec0[None], recs], axis=0)
+    mv = jnp.concatenate([jnp.zeros((1, nby, nbx, 2), jnp.int32), mvs], axis=0)
+    residual_q = jnp.concatenate([q0[None], qs], axis=0)
+    all_bits = jnp.concatenate([bits0[None], bits], axis=0)
+    rmag0 = jnp.mean(jnp.abs(frames[0].astype(f32) - 128.0))
+    residual_mag = jnp.concatenate([rmag0[None], rmags], axis=0)
+    frame_diff = jnp.concatenate([jnp.zeros((1,), f32), fdiffs], axis=0)
+    return EncodedChunk(recon=recon, mv=mv, residual_q=residual_q,
+                        qtab=qtab, bits=all_bits,
+                        residual_mag=residual_mag, frame_diff=frame_diff)
+
+
+def decode_chunk(enc: EncodedChunk):
+    """The decoder's frame reconstruction (same as encoder's loop)."""
+    return enc.recon
+
+
+def chunk_psnr(raw, recon):
+    mse = jnp.mean(jnp.square(raw.astype(f32) - recon.astype(f32)),
+                   axis=(1, 2))
+    return 10.0 * jnp.log10(255.0 ** 2 / jnp.maximum(mse, 1e-9))

@@ -1,0 +1,14 @@
+"""BiSwift core: the paper's contribution as composable JAX modules.
+
+hybrid_encoder  — camera side: ladder selection + frame classification +
+                  JPEG anchor encoding under the allocated bandwidth
+hybrid_decoder  — edge side: decode + 3 execution pipelines (infer /
+                  quality-transfer+infer / MV-reuse)
+quality_transfer— anchor-HD block transfer onto LR frames (Fig. 7)
+reuse           — cached-detection MV shift (pipeline ③)
+classification  — Eq. 3 threshold classifier
+bandwidth_controller — high-level SAC allocation (Eq. 5/6)
+bilevel         — joint low-level/high-level DRL training driver
+"""
+from repro.core.classification import classify_frames  # noqa: F401
+from repro.core.fairness import min_reward_fairness, jain_index  # noqa: F401

@@ -1,0 +1,69 @@
+"""Analytics-aware bandwidth controller (paper §IV-C / §V-B).
+
+Wraps the high-level SAC agent: observes S_high = (num, size, r, b_L, acc,
+p), emits the per-stream bandwidth proportion vector every
+``controller_interval`` chunks (10 s in the paper), and is trained with
+reward r_high = min_c r_c (Eq. 6).  Baseline comparison: even allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.rl import sac
+from repro.rl.replay import ReplayBuffer
+
+f32 = np.float32
+
+
+@dataclasses.dataclass
+class BandwidthController:
+    agent: dict
+    cfg: sac.SACConfig
+    buffer: ReplayBuffer
+    interval: int = 10
+    _last_state: np.ndarray | None = None
+    _last_action: np.ndarray | None = None
+    _current: np.ndarray | None = None
+    updates: int = 0
+
+    @classmethod
+    def create(cls, key, state_dim: int, n_streams: int, interval: int = 10):
+        cfg = sac.SACConfig(state_dim=state_dim, action_dim=n_streams)
+        agent = sac.init(key, cfg)
+        buf = ReplayBuffer(cfg.buffer_size, state_dim, n_streams)
+        return cls(agent=agent, cfg=cfg, buffer=buf, interval=interval)
+
+    def proportions(self, key, state: np.ndarray, t: int,
+                    explore: bool = True) -> np.ndarray:
+        """Controller action; recomputed every ``interval`` chunks."""
+        if self._current is None or t % self.interval == 0:
+            a = np.asarray(sac.act(key, self.agent, state, explore))
+            self._last_state = state
+            self._last_action = a
+            p = a + 1e-3
+            self._current = (p / p.sum()).astype(f32)
+        return self._current
+
+    def record(self, reward: float, next_state: np.ndarray,
+               done: bool = False):
+        if self._last_state is not None:
+            self.buffer.add(self._last_state, self._last_action, reward,
+                            next_state, done)
+
+    def train(self, key, n_updates: int = 1):
+        logs = []
+        for _ in range(n_updates):
+            if len(self.buffer) < self.cfg.minibatch:
+                break
+            batch = self.buffer.sample(self.cfg.minibatch)
+            self.agent, log = sac.update(key, self.agent, batch, self.cfg)
+            self.updates += 1
+            logs.append(log)
+        return logs
+
+
+def even_proportions(n_streams: int) -> np.ndarray:
+    return np.full(n_streams, 1.0 / n_streams, f32)

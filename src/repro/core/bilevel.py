@@ -1,0 +1,108 @@
+"""Bi-level joint training driver (paper §V, Fig. 9).
+
+High level (bandwidth controller, SAC) and low level (per-camera frame
+classification agents, A2C) are trained jointly: the controller's action
+conditions every agent's state (allocations appear in S_c), and the
+agents' decisions feed back into S_high (anchor proportions p, accuracy).
+Experience flows every chunk; the controller acts every 10 chunks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.bandwidth_controller import BandwidthController
+from repro.core.fairness import jain_index
+from repro.rl import a2c
+from repro.rl.replay import ReplayBuffer
+from repro.sim.env import EnvConfig, MultiStreamEnv, low_state_dim, \
+    high_state_dim
+
+f32 = np.float32
+
+
+@dataclasses.dataclass
+class BiLevelTrainer:
+    env: MultiStreamEnv
+    low_agents: list
+    low_cfg: a2c.A2CConfig
+    controller: BandwidthController
+    low_buffers: list
+    key: jax.Array
+    low_batch: int = 32
+
+    @classmethod
+    def create(cls, cfg: EnvConfig, seed: int = 0, detector=None):
+        env = MultiStreamEnv(cfg, detector=detector)
+        key = jax.random.PRNGKey(seed)
+        C = len(cfg.streams)
+        sdim = low_state_dim(cfg)
+        low_cfg = a2c.A2CConfig(state_dim=sdim, tau_latency=cfg.latency_tau)
+        keys = jax.random.split(key, C + 2)
+        agents = [a2c.init(keys[i], low_cfg) for i in range(C)]
+        controller = BandwidthController.create(
+            keys[C], high_state_dim(cfg), C, cfg.controller_interval)
+        bufs = [ReplayBuffer(4096, sdim, 2, seed=i) for i in range(C)]
+        return cls(env=env, low_agents=agents, low_cfg=low_cfg,
+                   controller=controller, low_buffers=bufs, key=keys[C + 1])
+
+    # ------------------------------------------------------------------
+    def run_chunk(self, explore: bool = True, train: bool = True):
+        env, C = self.env, self.env.C
+        self.key, k_hi, k_tr = jax.random.split(self.key, 3)
+        klo = jax.random.split(self.key, C)
+
+        s_high = env.observe_high()
+        props = self.controller.proportions(k_hi, s_high, env.t, explore)
+        s_low = [env.observe_low(c, props) for c in range(C)]
+        thresholds = np.stack([
+            np.asarray(a2c.act(klo[c], self.low_agents[c], s_low[c],
+                               explore)) for c in range(C)])
+        # scale thresholds into feature range (features are ~[0, 0.5])
+        thr = thresholds * np.array([0.5, 0.5], f32)
+
+        results, info = env.step(props, thr)
+
+        rewards = np.asarray([r["reward"] for r in results], f32)
+        r_high = float(rewards.min())                     # Eq. 6
+        s_high2 = env.observe_high()
+        self.controller.record(r_high, s_high2)
+        s_low2 = [env.observe_low(c, props) for c in range(C)]
+        for c in range(C):
+            self.low_buffers[c].add(s_low[c], thresholds[c], rewards[c],
+                                    s_low2[c], False)
+
+        logs = {}
+        if train:
+            for c in range(C):
+                if len(self.low_buffers[c]) >= self.low_batch:
+                    batch = self.low_buffers[c].sample(self.low_batch)
+                    self.low_agents[c], llog = a2c.update(
+                        self.low_agents[c], batch, self.low_cfg)
+                    logs[f"low{c}"] = {k: float(v) for k, v in llog.items()}
+            hlogs = self.controller.train(k_tr, n_updates=1)
+            if hlogs:
+                logs["high"] = {k: float(v) for k, v in hlogs[-1].items()}
+
+        metrics = {
+            "mean_acc": float(np.mean([r["accuracy"] for r in results])),
+            "min_acc": float(np.min([r["accuracy"] for r in results])),
+            "mean_latency": float(np.mean([r["latency"] for r in results])),
+            "reward_min": r_high,
+            "jain": float(jain_index(np.asarray(
+                [r["accuracy"] for r in results]))),
+            "utilization": float(np.mean([r["utilization"]
+                                          for r in results])),
+            "anchor_frac": float(np.mean([r["n_anchor"] / len(r["types"])
+                                          for r in results])),
+        }
+        return metrics, results, info, logs
+
+    def train_steps(self, n: int, explore: bool = True):
+        history = []
+        for _ in range(n):
+            metrics, _, _, _ = self.run_chunk(explore=explore, train=True)
+            history.append(metrics)
+        return history

@@ -1,0 +1,57 @@
+"""Frame classification — Eq. 3 of the paper.
+
+Given the two agent thresholds (tr1, tr2) for a chunk, every frame is
+assigned one of three pipelines:
+
+  type 1 (anchor):   X_f > tr1            -> HD JPEG + full inference
+  type 2 (transfer): X_f <= tr1, R_f > tr2 -> quality transfer + inference
+  type 3 (reuse):    otherwise             -> MV-shift cached results
+
+X_f is the difference feature between frame f and the last *inference*
+frame before f; R_f is the residual accumulated since that frame.  Both
+therefore reset at every type-1/2 frame, which makes the classification a
+sequential scan (exactly as the decoder replays it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+f32 = jnp.float32
+
+
+def classify_frames(frame_diff, residual_mag, tr1, tr2):
+    """frame_diff/residual_mag: (T,) per-frame codec features (normalized).
+
+    Returns (types (T,) int32 in {1,2,3}, X (T,), R (T,)) where X/R are the
+    accumulated features actually compared against the thresholds.
+    """
+    T = frame_diff.shape[0]
+
+    def step(carry, inp):
+        accX, accR = carry
+        fd, rm, idx = inp
+        X = accX + fd
+        R = accR + rm
+        is1 = (X > tr1) | (idx == 0)   # chunk I-frame is always an anchor
+        is2 = (~is1) & (R > tr2)
+        t = jnp.where(is1, 1, jnp.where(is2, 2, 3))
+        inferred = t != 3
+        accX = jnp.where(inferred, 0.0, X)
+        accR = jnp.where(inferred, 0.0, R)
+        return (accX, accR), (t.astype(jnp.int32), X, R)
+
+    (_, _), (types, X, R) = lax.scan(
+        step, (jnp.asarray(0.0, f32), jnp.asarray(0.0, f32)),
+        (frame_diff.astype(f32), residual_mag.astype(f32),
+         jnp.arange(T, dtype=jnp.int32)))
+    return types, X, R
+
+
+def anchor_fraction(types):
+    return jnp.mean((types == 1).astype(f32))
+
+
+def pipeline_fractions(types):
+    return jnp.stack([jnp.mean((types == k).astype(f32)) for k in (1, 2, 3)])

@@ -1,0 +1,24 @@
+"""Fairness objectives for the bandwidth controller (paper Eq. 1, Eq. 6)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def min_reward_fairness(rewards):
+    """max-min fairness: the controller maximizes the worst stream (Eq. 6)."""
+    return jnp.min(rewards)
+
+
+def jain_index(values):
+    """Jain's fairness index in [1/n, 1] — reported in EXPERIMENTS.md."""
+    v = jnp.asarray(values, f32)
+    return jnp.square(v.sum()) / jnp.maximum(v.shape[0] * (v * v).sum(), 1e-9)
+
+
+def accuracy_spread(accs, lo: float = 0.5, hi: float = 0.75):
+    """Percentile spread of per-stream accuracy (paper Fig. 12)."""
+    v = jnp.sort(jnp.asarray(accs, f32))
+    n = v.shape[0]
+    return v[int(hi * (n - 1))] - v[int(lo * (n - 1))]

@@ -1,0 +1,102 @@
+"""Hybrid encoder (paper §IV-A, Fig. 5) — camera side.
+
+Per chunk: 1) the *video encoder* picks a (bitrate, resolution) ladder
+level from the allocated bandwidth (adaptive feedback control, §VI-A
+5-level ladder); 2) the *agent*'s thresholds (tr1, tr2) classify frames
+via codec features (Eq. 3); 3) the *image encoder* JPEG-encodes type-1
+frames (anchors) at the highest quality that fits the remaining bandwidth
+share.  Anchors and video share the stream's allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codec import blockdct
+from repro.codec.image_codec import jpeg_encode_decode, jpeg_bits
+from repro.codec.rate_model import (QUALITY_LADDER, downscale,
+                                    ladder_for_bandwidth, upscale_nearest)
+from repro.codec.video_codec import VideoCodecConfig, encode_chunk
+from repro.core.classification import classify_frames
+
+f32 = jnp.float32
+
+ANCHOR_QUALITIES = (25.0, 40.0, 55.0, 70.0, 85.0)
+
+
+@dataclasses.dataclass
+class HybridPacket:
+    """What the camera ships to the edge for one chunk."""
+    types: np.ndarray           # (T,) 1/2/3 pipeline assignment
+    ladder_level: int
+    video: object               # EncodedChunk (LR)
+    anchor_hd: np.ndarray       # (T, H, W) decoded-anchor plane (0 for non-anchors)
+    anchor_quality: float
+    video_bits: float
+    anchor_bits: float
+    lr_shape: tuple
+
+    @property
+    def total_bits(self) -> float:
+        return float(self.video_bits + self.anchor_bits)
+
+
+def _normalize_features(enc):
+    """Codec features -> [0, ~1] classification features."""
+    fd = enc.frame_diff / 255.0
+    rm = enc.residual_mag / 255.0
+    return fd, rm
+
+
+def encode_hybrid(raw_frames, bw_kbps: float, tr1: float, tr2: float,
+                  fps: float = 30.0, codec_overrides: dict | None = None
+                  ) -> HybridPacket:
+    """raw_frames: (T, H, W) [0..255] numpy/jax array.
+
+    Host-level orchestration (anchor count is data-dependent); all inner
+    compute (codec, JPEG, classification) is jitted JAX.
+    """
+    raw_frames = jnp.asarray(raw_frames, f32)
+    T, H, W = raw_frames.shape
+    budget_bits = bw_kbps * 1000.0 * (T / fps)
+
+    # 1) ladder selection with headroom reserved for anchors (~35%)
+    level = ladder_for_bandwidth(bw_kbps * 0.65)
+    ql = QUALITY_LADDER[level]
+    frames_lr = downscale(raw_frames, ql.scale)
+    cfg = VideoCodecConfig(quality=ql.quality)
+    if codec_overrides:
+        cfg = dataclasses.replace(cfg, **codec_overrides)
+    enc = jax.jit(encode_chunk, static_argnums=1)(frames_lr, cfg)
+    video_bits = float(enc.bits.sum())
+
+    # 2) frame classification from codec features
+    fd, rm = _normalize_features(enc)
+    types, _, _ = classify_frames(fd, rm, tr1, tr2)
+    types = np.asarray(types)
+    anchor_ids = np.nonzero(types == 1)[0]
+
+    # 3) anchors: highest JPEG quality fitting the leftover budget
+    anchor_budget = max(budget_bits - video_bits, 0.0)
+    per_anchor = anchor_budget / max(len(anchor_ids), 1)
+    quality = ANCHOR_QUALITIES[0]
+    for q in ANCHOR_QUALITIES:
+        bits = float(jax.jit(jpeg_bits)(raw_frames[anchor_ids[0]], q)) \
+            if len(anchor_ids) else 0.0
+        if bits <= per_anchor:
+            quality = q
+    anchor_hd = np.zeros((T, H, W), np.float32)
+    anchor_bits = 0.0
+    jpeg = jax.jit(jpeg_encode_decode)
+    for i in anchor_ids:
+        rec, bits = jpeg(raw_frames[i], quality)
+        anchor_hd[i] = np.asarray(rec)
+        anchor_bits += float(bits)
+
+    return HybridPacket(types=types, ladder_level=level, video=enc,
+                        anchor_hd=anchor_hd, anchor_quality=float(quality),
+                        video_bits=video_bits, anchor_bits=anchor_bits,
+                        lr_shape=tuple(frames_lr.shape))

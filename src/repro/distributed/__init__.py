@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    SINGLE_POD_RULES,
+    MULTI_POD_RULES,
+    logical_to_spec,
+    make_axis_rules,
+)

@@ -1,0 +1,52 @@
+"""Ambient shard context.
+
+Model code consults this at *trace* time to decide whether to emit explicit
+``shard_map`` regions (MoE sorted dispatch must not argsort a globally
+sharded token axis — that would force an all-gather of every token).
+Launchers trace/lower inside ``with shard_ctx(mesh, rules): ...``; CPU smoke
+tests trace with no context and take the purely local paths.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import AxisRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    rules: AxisRules
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        return self.rules.mesh_axes("batch")
+
+    @property
+    def tensor_axes(self) -> tuple[str, ...]:
+        return self.rules.mesh_axes("tensor")
+
+    def axis_size(self, axes: tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+_CTX: list[ShardCtx] = []
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh: Mesh, rules: AxisRules):
+    _CTX.append(ShardCtx(mesh, rules))
+    try:
+        yield _CTX[-1]
+    finally:
+        _CTX.pop()
+
+
+def current_ctx() -> ShardCtx | None:
+    return _CTX[-1] if _CTX else None

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for BiSwift's compute hot spots.
+
+flash_attention — fused online-softmax attention (causal / sliding-window /
+                  GQA) for the LM backbones; avoids materializing repeated
+                  KV heads or S×S scores.
+qtransfer       — quality transfer (paper Fig. 7): MV block gather from the
+                  HD anchor plane + residual add, tiled 16×16 per macroblock
+                  row with the anchor staged in VMEM.
+blockdct        — 8×8 DCT + quantization (JPEG/codec core) as paired 8×8
+                  matmuls over VMEM tiles (MXU-shaped by construction).
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, interpret=True on CPU), ref.py (pure-jnp oracle).
+"""

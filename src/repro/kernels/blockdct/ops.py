@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the blockdct kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.codec import blockdct as B
+from repro.kernels.blockdct.kernel import blockdct_tiles
+
+f32 = jnp.float32
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def blockdct_quantize(blocks, quality, *, tile: int = 256,
+                      interpret: bool | None = None):
+    """blocks: (nb, 8, 8) f32 -> (quantized, recon)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    dmat = jnp.asarray(B.dct_matrix(8), f32)
+    qtab = jnp.maximum(B.JPEG_LUMA_Q50 * B.quality_scale(quality), 1.0)
+    return blockdct_tiles(blocks.astype(f32), dmat, qtab, tile=tile,
+                          interpret=interpret)

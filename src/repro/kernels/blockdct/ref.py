@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: repro.codec.blockdct composed round trip."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codec import blockdct as B
+
+f32 = jnp.float32
+
+
+def blockdct_ref(blocks, quality):
+    """blocks: (nb, 8, 8) -> (quantized coefs, recon blocks)."""
+    coefs = B.dct2(blocks)
+    q, qtab = B.quantize(coefs, quality)
+    rec = B.idct2(B.dequantize(q, qtab))
+    return q, rec

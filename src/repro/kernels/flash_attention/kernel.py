@@ -1,0 +1,110 @@
+"""Flash attention forward kernel (Pallas TPU).
+
+Grid: (B, H, nq, nk) with the kv dimension innermost; the online-softmax
+state (m, l, acc) lives in VMEM scratch and survives across the nk steps of
+one (b, h, i) cell.  GQA is handled in the k/v BlockSpec index maps
+(kv_head = h * Hk // H) — the repeated KV heads are never materialized.
+Causal and sliding-window masks are applied from global position iota.
+
+Block shapes: q (1, 1, QB, D); k/v (1, 1, KB, D) — QB/KB default 128/128,
+MXU-aligned for D ∈ {64, 128}.  VMEM per cell ≈ QB·D·4 + 2·KB·D·2 + scores
+QB·KB·4 ≈ 160 KiB at defaults, far under the ~16 MiB/core budget, leaving
+headroom for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, causal: bool, window, q_blk: int, k_blk: int,
+                nk: int, seq_q: int, seq_k: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.bfloat16)          # (QB, D)
+    k = k_ref[0, 0].astype(jnp.bfloat16)          # (KB, D)
+    v = v_ref[0, 0].astype(jnp.bfloat16)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=f32) * scale  # (QB, KB)
+
+    q_pos = i * q_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 0)
+    k_pos = j * k_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 1)
+    mask = (k_pos < seq_k) & (q_pos < seq_q)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1)
+    pv = jax.lax.dot_general(p.astype(jnp.bfloat16), v,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=f32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,
+                        q_blk: int = 128, k_blk: int = 128,
+                        interpret: bool = False):
+    """q: (B, H, Sq, D); k/v: (B, Hk, Sk, D) -> (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    Hk, Sk = k.shape[1], k.shape[2]
+    q_blk = min(q_blk, Sq)
+    k_blk = min(k_blk, Sk)
+    nq = pl.cdiv(Sq, q_blk)
+    nk = pl.cdiv(Sk, k_blk)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        q_blk=q_blk, k_blk=k_blk, nk=nk, seq_q=Sq, seq_k=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, k_blk, D),
+                         lambda b, h, i, j, Hk=Hk, H=H: (b, h * Hk // H, j, 0)),
+            pl.BlockSpec((1, 1, k_blk, D),
+                         lambda b, h, i, j, Hk=Hk, H=H: (b, h * Hk // H, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk,), f32),
+            pltpu.VMEM((q_blk,), f32),
+            pltpu.VMEM((q_blk, D), f32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+Accepts model-layout tensors (B, S, H, D) and handles transposition,
+GQA head mapping, and the CPU fallback (interpret mode executes the kernel
+body in Python on CPU for correctness validation; real TPUs compile it).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_blk", "k_blk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    q_blk: int = 128, k_blk: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hk, D) -> (B, Sq, H, D)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                            q_blk=q_blk, k_blk=k_blk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,1 @@
+from repro.kernels.qtransfer.ops import qtransfer  # noqa: F401

@@ -1,0 +1,25 @@
+"""Jit'd wrapper: per-frame and batched (vmap) quality transfer."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qtransfer.kernel import qtransfer_rows
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("radius", "interpret"))
+def qtransfer(anchor, mv, resid, *, radius: int = 16,
+              interpret: bool | None = None):
+    """anchor/resid: (H, W) or (T, H, W); mv: (..., nby, nbx, 2) int32."""
+    if interpret is None:
+        interpret = not on_tpu()
+    fn = partial(qtransfer_rows, radius=radius, interpret=interpret)
+    if anchor.ndim == 3:
+        return jax.vmap(fn)(anchor, mv, resid)
+    return fn(anchor, mv, resid)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the qtransfer kernel.
+
+Same semantics as repro.codec.motion.warp_blocks + residual add, with the
+kernel's clamping rules (vertical clamp to ±radius, horizontal clamp to
+the frame border, edge padding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+MB = 16
+f32 = jnp.float32
+
+
+def qtransfer_ref(anchor, mv, resid, *, radius: int = 16):
+    H, W = anchor.shape
+    nby, nbx = mv.shape[:2]
+    ap = jnp.pad(anchor.astype(f32), ((radius, radius), (0, 0)), mode="edge")
+
+    def one(by, bx):
+        dy = jnp.clip(mv[by, bx, 0], -radius, radius)
+        dx = mv[by, bx, 1]
+        y0 = radius + by * MB + dy
+        x0 = jnp.clip(bx * MB + dx, 0, W - MB)
+        return lax.dynamic_slice(ap, (y0, x0), (MB, MB))
+
+    rows = jax.vmap(lambda by: jax.vmap(lambda bx: one(by, bx))(
+        jnp.arange(nbx)))(jnp.arange(nby))          # (nby, nbx, MB, MB)
+    warped = rows.transpose(0, 2, 1, 3).reshape(H, W)
+    return jnp.clip(warped + resid.astype(f32), 0.0, 255.0).astype(anchor.dtype)

@@ -1,0 +1,290 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The FIRST two lines below must run before any other import (jax locks the
+device count on first init).  Each invocation handles one cell in a fresh
+process; a driver loops cells:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_1b \
+        --shape train_4k --mesh single --out experiments/dryrun
+
+Cost-analysis methodology
+-------------------------
+XLA's HLO cost analysis counts a while-loop body ONCE regardless of trip
+count, so rolled ``lax.scan`` layers would undercount FLOPs by ~n_layers.
+We therefore do THREE compiles per cell:
+
+  * the real config with rolled scans -> memory_analysis (the deployable
+    artifact: per-device argument/temp bytes prove the cell fits HBM);
+  * two probes at n_layers = 2 and 4 with every scan fully unrolled ->
+    exact per-layer FLOPs/bytes/collective deltas;
+  * extrapolation: cost(L) = cost(2) + (L-2)/2 * (cost(4) - cost(2)).
+
+Conv families (ResNet/ConvNeXt) have heterogeneous stages, so they compile
+once fully unrolled (cheap: conv bodies are small) and use direct costs.
+
+Wire bytes use ring-algorithm estimates with group sizes parsed from each
+collective's ``replica_groups``.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import get_arch, all_cells, ALIASES        # noqa: E402
+from repro.distributed.context import shard_ctx               # noqa: E402
+from repro.distributed.sharding import make_axis_rules        # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.launch.steps import build_cell                     # noqa: E402
+from repro.models import layers as model_layers               # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    bpe = _DTYPE_BYTES.get(dtype)
+    if bpe is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * bpe
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def parse_collectives(hlo: str, n_devices: int) -> dict:
+    """Per-opcode: count, per-device output bytes, ring wire-byte estimate.
+
+    Counts '-start' async forms once; skips '-done'.
+    """
+    out: dict[str, dict] = {}
+    wire = 0.0
+    for line in hlo.splitlines():
+        for op in _COLLECTIVES:
+            if f" {op}(" not in line and f" {op}-start(" not in line:
+                continue
+            pos = line.find(f" {op}")
+            lhs = line[:pos]
+            out_b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+            g = _group_size(line, n_devices)
+            if op == "all-reduce":
+                w = 2.0 * out_b * (g - 1) / max(g, 1)
+            elif op == "all-gather":
+                w = out_b * (g - 1) / max(g, 1)
+            elif op == "reduce-scatter":
+                w = out_b * (g - 1)
+            elif op == "all-to-all":
+                w = out_b * (g - 1) / max(g, 1)
+            else:  # collective-permute
+                w = float(out_b)
+            rec = out.setdefault(op, {"count": 0, "output_bytes": 0,
+                                      "wire_bytes": 0.0})
+            rec["count"] += 1
+            rec["output_bytes"] += out_b
+            rec["wire_bytes"] += w
+            wire += w
+            break
+    out["_total_wire_bytes"] = wire
+    return out
+
+
+def _with_layers(arch, n: int):
+    """Probe config with n (scanned) layers; transformer families only."""
+    cfg = dataclasses.replace(arch.cfg, n_layers=n)
+    return dataclasses.replace(arch, cfg=cfg)
+
+
+def _apply_variant_overrides(arch, variant: str):
+    """Config-level hillclimb knobs (rules-level ones live in sharding.py)."""
+    from repro.launch import steps as steps_mod
+    import jax.numpy as jnp
+    if variant == "kvint8":
+        if arch.family == "lm":
+            arch = dataclasses.replace(
+                arch, cfg=dataclasses.replace(arch.cfg,
+                                              kv_cache_dtype="int8"))
+        steps_mod.set_grad_accum_dtype(jnp.float32)
+    elif variant.startswith("fast_train"):
+        steps_mod.set_grad_accum_dtype(jnp.bfloat16)
+        if arch.family == "lm" and arch.cfg.moe is not None:
+            moe = dataclasses.replace(arch.cfg.moe, capacity_factor=1.0)
+            arch = dataclasses.replace(
+                arch, cfg=dataclasses.replace(arch.cfg, moe=moe))
+        if variant == "fast_train4":
+            # halve the microbatch count: halves per-step FSDP weight
+            # gathers + gradient reductions, costs 2x activation memory
+            shapes = {k: (dataclasses.replace(v, grad_accum=4)
+                          if v.kind == "train" and v.grad_accum > 4 else v)
+                      for k, v in arch.shapes.items()}
+            arch = dataclasses.replace(arch, shapes=shapes)
+    else:
+        steps_mod.set_grad_accum_dtype(jnp.float32)
+    return arch
+
+
+def _costs(compiled, n_devices):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    rec = {k: float(cost.get(k, 0.0)) for k in
+           ("flops", "bytes accessed", "transcendentals")}
+    rec["collectives"] = parse_collectives(compiled.as_text(), n_devices)
+    rec["wire_bytes"] = rec["collectives"].pop("_total_wire_bytes")
+    return rec
+
+
+def _compile_cell(arch, case, mesh, rules, unroll: bool):
+    model_layers.set_dryrun_unroll(unroll)
+    try:
+        with mesh, shard_ctx(mesh, rules):
+            cell = build_cell(arch, case, mesh, rules)
+            jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            compiled = lowered.compile()
+        return compiled
+    finally:
+        model_layers.set_dryrun_unroll(False)
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str, variant: str,
+             out_dir: str | None):
+    arch = get_arch(arch_id)
+    case = arch.shapes[shape]
+    rec = {"arch": ALIASES.get(arch_id, arch_id), "shape": shape,
+           "mesh": mesh_kind, "variant": variant}
+    if case.skip:
+        rec["status"] = "skipped"
+        rec["reason"] = case.skip
+        _dump(rec, out_dir)
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi,
+                                degraded=(mesh_kind == "degraded"))
+    rules = make_axis_rules(multi, variant)
+    arch = _apply_variant_overrides(arch, variant)
+    case = arch.shapes[shape]          # re-fetch: overrides may change it
+    rec["mesh_shape"] = dict(mesh.shape)
+    rec["n_devices"] = mesh.size
+    nd = mesh.size
+
+    # 1) real config, rolled scans -> deployable memory picture
+    t0 = time.time()
+    compiled = _compile_cell(arch, case, mesh, rules, unroll=False)
+    rec["compile_s"] = round(time.time() - t0, 2)
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        k: int(getattr(mem, k))
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes")
+        if hasattr(mem, k)
+    }
+
+    # 2) exact per-device costs
+    fam = arch.family
+    homogeneous = fam in ("lm", "diffusion") or \
+        arch.cfg.__class__.__name__ == "ViTConfig"
+    if homogeneous and arch.cfg.n_layers > 4:
+        # probes at 2 and 4 layers: even counts keep the partitioner on the
+        # same strategy; delta/2 = exact per-layer cost.
+        c1 = _costs(_compile_cell(_with_layers(arch, 2), case, mesh, rules,
+                                  unroll=True), nd)
+        c2 = _costs(_compile_cell(_with_layers(arch, 4), case, mesh, rules,
+                                  unroll=True), nd)
+        L = arch.cfg.n_layers
+        cost = {}
+        for k in ("flops", "bytes accessed", "transcendentals",
+                  "wire_bytes"):
+            per_layer = (c2[k] - c1[k]) / 2.0
+            cost[k] = max(c1[k] + (L - 2) * per_layer, 0.0)
+        colls = {}
+        for op in set(c1["collectives"]) | set(c2["collectives"]):
+            a = c1["collectives"].get(op, {"count": 0, "output_bytes": 0,
+                                           "wire_bytes": 0.0})
+            b = c2["collectives"].get(op, {"count": 0, "output_bytes": 0,
+                                           "wire_bytes": 0.0})
+            colls[op] = {k2: max(a[k2] + (L - 2) * (b[k2] - a[k2]) / 2.0, 0)
+                         for k2 in a}
+        rec["cost_method"] = "probe_extrapolation(L=2,4 unrolled)"
+        rec["cost"] = cost
+        rec["collectives"] = colls
+    else:
+        c = _costs(_compile_cell(arch, case, mesh, rules, unroll=True), nd)
+        rec["cost_method"] = "full_unroll"
+        rec["cost"] = {k: c[k] for k in ("flops", "bytes accessed",
+                                         "transcendentals", "wire_bytes")}
+        rec["collectives"] = c["collectives"]
+    rec["total_s"] = round(time.time() - t0, 2)
+    rec["status"] = "ok"
+    _dump(rec, out_dir)
+    return rec
+
+
+def _dump(rec, out_dir):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__"
+                 f"{rec['variant']}.json".replace("/", "_"))
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "degraded"],
+                    default="single")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for a, s, skip in all_cells():
+            print(f"{a}\t{s}\t{'SKIP:' + skip if skip else 'run'}")
+        return
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, args.variant,
+                       args.out)
+        print(json.dumps(rec, indent=1))
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "variant": args.variant, "status": "error",
+               "error": traceback.format_exc()}
+        _dump(rec, args.out)
+        print(json.dumps(rec, indent=1))
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state.  The dry-run process sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import (see dryrun.py); smoke tests and benchmarks see the real (1-device)
+platform.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, degraded: bool = False):
+    """degraded=True builds the (8, 16) elastic-continuation mesh: the
+    shape the fleet re-forms after losing a data-axis slice (half the
+    pod's rows); checkpoints restore onto it via train/checkpoint.py."""
+    if degraded:
+        return jax.make_mesh((8, 16), ("data", "model"))
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_data: int | None = None, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU demos)."""
+    n = len(jax.devices())
+    if n_data is None:
+        n_data = n // n_model
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# v5e hardware constants for the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link

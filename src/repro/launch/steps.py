@@ -1,0 +1,333 @@
+"""Step builders + input specs for every (architecture × shape) cell.
+
+``build_cell(arch_spec, shape_case, mesh, rules)`` returns a :class:`Cell`
+whose ``fn`` is the jit-able step and whose ``args`` are ShapeDtypeStructs
+carrying NamedShardings — zero allocation, ready for
+``jax.jit(fn, donate_argnums=...).lower(*args).compile()``.
+
+``materialize(key, arch_spec, shape_case)`` produces real (small) arrays for
+smoke tests; callers use the *reduced* configs there.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, ShapeCase
+from repro.distributed.sharding import AxisRules, named_sharding
+from repro.models import params as PM
+from repro.train import optimizer as OPT
+
+i32 = jnp.int32
+f32 = jnp.float32
+bf16 = jnp.bfloat16
+
+ADAMW = OPT.AdamWConfig()
+
+# fast_train hillclimb knob: accumulate microbatch grads in bf16 (halves
+# the per-microbatch gradient all-reduce payload; EXPERIMENTS.md §Perf).
+GRAD_ACCUM_DTYPE = f32
+
+
+def set_grad_accum_dtype(dt):
+    global GRAD_ACCUM_DTYPE
+    GRAD_ACCUM_DTYPE = dt
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: tuple
+    donate: tuple[int, ...]
+    kind: str
+
+
+def _sds(shape, dtype, axes, mesh, rules):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=named_sharding(mesh, axes, rules, shape))
+
+
+def _family(arch: ArchSpec):
+    return arch.family
+
+
+def _specs_tree(arch: ArchSpec):
+    if arch.family == "lm":
+        from repro.models import transformer_lm as M
+        return M.param_specs(arch.cfg)
+    if arch.family == "diffusion":
+        from repro.models import dit as M
+        return M.param_specs(arch.cfg)
+    if arch.cfg.__class__.__name__ == "ResNetConfig":
+        from repro.models import resnet as M
+        return M.param_specs(arch.cfg)
+    if arch.cfg.__class__.__name__ == "ConvNeXtConfig":
+        from repro.models import convnext as M
+        return M.param_specs(arch.cfg)
+    from repro.models import vit as M
+    return M.param_specs(arch.cfg)
+
+
+def _loss_and_new_stats(arch: ArchSpec):
+    """Returns loss_fn(params_or_vars, batch) -> (loss, aux_stats|None)."""
+    cfg = arch.cfg
+    if arch.family == "lm":
+        from repro.models import transformer_lm as M
+        return lambda p, b: (M.loss_fn(p, cfg, b), None), False
+    if arch.family == "diffusion":
+        from repro.models import dit as M
+        return lambda p, b: (M.loss_fn(p, cfg, b), None), False
+    name = cfg.__class__.__name__
+    if name == "ResNetConfig":
+        from repro.models import resnet as M
+        return lambda v, b: M.loss_fn(v, cfg, b), True   # (loss, new_stats)
+    if name == "ConvNeXtConfig":
+        from repro.models import convnext as M
+        return lambda p, b: (M.loss_fn(p, cfg, b), None), False
+    from repro.models import vit as M
+    return lambda p, b: (M.loss_fn(p, cfg, b), None), False
+
+
+# --------------------------------------------------------------------------
+# batch specs per family/kind
+# --------------------------------------------------------------------------
+def batch_specs(arch: ArchSpec, case: ShapeCase, mesh, rules):
+    cfg = arch.cfg
+    B = case.batch
+    if arch.family == "lm":
+        if case.kind == "train":
+            return {
+                "tokens": _sds((B, case.seq_len), i32, ("batch", None), mesh, rules),
+                "labels": _sds((B, case.seq_len), i32, ("batch", None), mesh, rules),
+            }
+        if case.kind == "prefill":
+            return {"tokens": _sds((B, case.seq_len), i32, ("batch", None),
+                                   mesh, rules)}
+        if case.kind == "decode":
+            return {
+                "tokens": _sds((B, 1), i32, ("batch", None), mesh, rules),
+                "pos": jax.ShapeDtypeStruct((), i32),
+            }
+    if arch.family == "diffusion":
+        lr = cfg.latent_res(case.img_res)
+        C = cfg.latent_channels
+        if case.kind == "train":
+            return {
+                "latents": _sds((B, lr, lr, C), f32, ("batch", None, None, None), mesh, rules),
+                "noise": _sds((B, lr, lr, C), f32, ("batch", None, None, None), mesh, rules),
+                "t": _sds((B,), i32, ("batch",), mesh, rules),
+                "labels": _sds((B,), i32, ("batch",), mesh, rules),
+            }
+        return {  # sample: one DDIM step
+            "xt": _sds((B, lr, lr, C), f32, ("batch", None, None, None), mesh, rules),
+            "t": _sds((B,), i32, ("batch",), mesh, rules),
+            "t_prev": _sds((B,), i32, ("batch",), mesh, rules),
+            "y": _sds((B,), i32, ("batch",), mesh, rules),
+        }
+    # vision
+    r = case.img_res
+    if case.kind == "train":
+        return {
+            "images": _sds((B, r, r, 3), bf16, ("batch", None, None, None), mesh, rules),
+            "labels": _sds((B,), i32, ("batch",), mesh, rules),
+        }
+    return {"images": _sds((B, r, r, 3), bf16, ("batch", None, None, None),
+                           mesh, rules)}
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+def make_train_fn(arch: ArchSpec, grad_accum: int = 1):
+    lf, has_stats = _loss_and_new_stats(arch)
+
+    if not has_stats:
+        def grads_of(params, batch):
+            return jax.value_and_grad(lambda p: lf(p, batch)[0])(params)
+
+        def train_step(state, batch):
+            if grad_accum == 1:
+                loss, grads = grads_of(state["params"], batch)
+            else:
+                # microbatch scan with fp32 grad accumulators (sharded like
+                # the params): bounds activation memory at paper-scale batch.
+                from repro.models.layers import constrain, scan_unroll
+
+                def split(x):
+                    y = x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                  *x.shape[1:])
+                    return constrain(y, None, "batch",
+                                     *([None] * (y.ndim - 2)))
+
+                mb = jax.tree.map(split, batch)
+                acc_dt = GRAD_ACCUM_DTYPE
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                                  state["params"])
+
+                def body(acc, b):
+                    gsum, lsum = acc
+                    loss, g = grads_of(state["params"], b)
+                    gsum = jax.tree.map(lambda a, x: a + x.astype(acc_dt),
+                                        gsum, g)
+                    return (gsum, lsum + loss), None
+
+                (gsum, lsum), _ = jax.lax.scan(
+                    body, (g0, 0.0), mb, unroll=scan_unroll(grad_accum))
+                grads = jax.tree.map(lambda g: (g / grad_accum), gsum)
+                loss = lsum / grad_accum
+            new_p, new_opt, metrics = OPT.apply_updates(
+                state["params"], grads, state["opt"], ADAMW)
+            return ({"params": new_p, "opt": new_opt},
+                    {"loss": loss, **metrics})
+        return train_step
+
+    def train_step(state, batch):
+        variables = {"params": state["params"],
+                     "batch_stats": state["batch_stats"]}
+
+        def inner(p):
+            loss, new_st = lf({"params": p,
+                               "batch_stats": state["batch_stats"]}, batch)
+            return loss, new_st
+
+        (loss, new_st), grads = jax.value_and_grad(inner, has_aux=True)(
+            state["params"])
+        new_p, new_opt, metrics = OPT.apply_updates(
+            state["params"], grads, state["opt"], ADAMW)
+        return ({"params": new_p, "opt": new_opt, "batch_stats": new_st},
+                {"loss": loss, **metrics})
+    return train_step
+
+
+def make_infer_fn(arch: ArchSpec, case: ShapeCase):
+    cfg = arch.cfg
+    if arch.family == "lm":
+        from repro.models import transformer_lm as M
+        if case.kind == "prefill":
+            return lambda params, batch: M.prefill_step(params, cfg,
+                                                        batch["tokens"])
+        if case.kind == "decode":
+            return lambda params, cache, batch: M.decode_step(
+                params, cfg, cache, batch["tokens"], batch["pos"])
+    if arch.family == "diffusion":
+        from repro.models import dit as M
+        return lambda params, batch: M.ddim_step(
+            params, cfg, batch["xt"], batch["t"], batch["t_prev"], batch["y"])
+    name = cfg.__class__.__name__
+    if name == "ResNetConfig":
+        from repro.models import resnet as M
+        return lambda variables, batch: M.forward(variables, cfg,
+                                                  batch["images"],
+                                                  train=False)[0]
+    if name == "ConvNeXtConfig":
+        from repro.models import convnext as M
+        return lambda params, batch: M.forward(params, cfg, batch["images"])
+    from repro.models import vit as M
+    return lambda params, batch: M.forward(params, cfg, batch["images"])
+
+
+# --------------------------------------------------------------------------
+# cell assembly
+# --------------------------------------------------------------------------
+def build_cell(arch: ArchSpec, case: ShapeCase, mesh=None,
+               rules: AxisRules | None = None) -> Cell:
+    specs = _specs_tree(arch)
+    is_resnet = arch.family == "vision" and \
+        arch.cfg.__class__.__name__ == "ResNetConfig"
+    if is_resnet:
+        params_sds = PM.abstract_params(specs["params"], mesh, rules)
+        stats_sds = PM.abstract_params(specs["batch_stats"], mesh, rules)
+    else:
+        params_sds = PM.abstract_params(specs, mesh, rules)
+        stats_sds = None
+    batch = batch_specs(arch, case, mesh, rules)
+
+    if case.kind == "train":
+        state = {"params": params_sds,
+                 "opt": OPT.abstract_state(params_sds)}
+        if is_resnet:
+            state["batch_stats"] = stats_sds
+        fn = make_train_fn(arch, grad_accum=case.grad_accum)
+        return Cell(f"{arch.arch_id}:{case.name}", fn, (state, batch),
+                    donate=(0,), kind="train")
+
+    fn = make_infer_fn(arch, case)
+    if arch.family == "lm" and case.kind == "decode":
+        from repro.models import transformer_lm as M
+        cache_specs = M.init_cache_specs(arch.cfg, case.batch, case.seq_len)
+        cache_sds = PM.abstract_params(cache_specs, mesh, rules)
+        return Cell(f"{arch.arch_id}:{case.name}", fn,
+                    (params_sds, cache_sds, batch), donate=(1,),
+                    kind="decode")
+    args0 = {"params": params_sds, "batch_stats": stats_sds} if is_resnet \
+        else params_sds
+    return Cell(f"{arch.arch_id}:{case.name}", fn, (args0, batch),
+                donate=(), kind=case.kind)
+
+
+# --------------------------------------------------------------------------
+# real arrays (reduced configs; smoke tests + examples)
+# --------------------------------------------------------------------------
+def materialize(key, arch: ArchSpec, case: ShapeCase):
+    """Small real inputs matching build_cell's structure (no shardings)."""
+    specs = _specs_tree(arch)
+    is_resnet = arch.family == "vision" and \
+        arch.cfg.__class__.__name__ == "ResNetConfig"
+    kp, kb = jax.random.split(key)
+    if is_resnet:
+        params = PM.init_params(kp, specs["params"])
+        stats = PM.init_params(kp, specs["batch_stats"])
+    else:
+        params = PM.init_params(kp, specs)
+        stats = None
+
+    cfg = arch.cfg
+    B = case.batch
+    if arch.family == "lm":
+        V = cfg.vocab
+        if case.kind in ("train", "prefill"):
+            toks = jax.random.randint(kb, (B, case.seq_len), 0, V, i32)
+            batch = {"tokens": toks}
+            if case.kind == "train":
+                batch["labels"] = jnp.roll(toks, -1, axis=1)
+        else:
+            batch = {"tokens": jax.random.randint(kb, (B, 1), 0, V, i32),
+                     "pos": jnp.array(min(7, case.seq_len - 1), i32)}
+    elif arch.family == "diffusion":
+        lr = cfg.latent_res(case.img_res)
+        C = cfg.latent_channels
+        x = jax.random.normal(kb, (B, lr, lr, C), f32)
+        if case.kind == "train":
+            batch = {"latents": x, "noise": jax.random.normal(kp, x.shape, f32),
+                     "t": jnp.full((B,), 500, i32),
+                     "labels": jnp.zeros((B,), i32)}
+        else:
+            batch = {"xt": x, "t": jnp.full((B,), 500, i32),
+                     "t_prev": jnp.full((B,), 480, i32),
+                     "y": jnp.zeros((B,), i32)}
+    else:
+        r = case.img_res
+        batch = {"images": jax.random.normal(kb, (B, r, r, 3), bf16)}
+        if case.kind == "train":
+            batch["labels"] = jnp.zeros((B,), i32)
+
+    if case.kind == "train":
+        state = {"params": params, "opt": OPT.init_state(params)}
+        if is_resnet:
+            state["batch_stats"] = stats
+        return (state, batch)
+    if arch.family == "lm" and case.kind == "decode":
+        from repro.models import transformer_lm as M
+        cache_specs = M.init_cache_specs(cfg, B, case.seq_len)
+        cache = PM.init_params(kp, cache_specs)
+        cache["slot_pos"] = jnp.full_like(cache["slot_pos"], -1)
+        return (params, cache, batch)
+    args0 = {"params": params, "batch_stats": stats} if is_resnet else params
+    return (args0, batch)

@@ -1,0 +1,114 @@
+"""ConvNeXt-B: depths 3-3-27-3, dims 128-256-512-1024 [arXiv:2201.03545].
+
+Block: 7x7 depthwise conv -> LayerNorm -> 1x1 (4x expand) -> GELU -> 1x1 ->
+LayerScale -> residual.  Blocks within a stage are stacked + scanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import spec
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNeXtConfig:
+    name: str
+    depths: tuple[int, int, int, int] = (3, 3, 27, 3)
+    dims: tuple[int, int, int, int] = (128, 256, 512, 1024)
+    n_classes: int = 1000
+    dtype: str = "bfloat16"
+    ls_init: float = 1e-6
+
+    def param_count(self) -> int:
+        from repro.models.params import param_count
+        return param_count(param_specs(self))
+
+
+def param_specs(cfg: ConvNeXtConfig):
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "stem_conv": spec((4, 4, 3, cfg.dims[0]), (None, None, None, "tensor"),
+                          dtype=dt, init="fan_in"),
+        "stem_ln_w": spec((cfg.dims[0],), (None,), dtype=dt, init="ones"),
+        "stem_ln_b": spec((cfg.dims[0],), (None,), dtype=dt, init="zeros"),
+        "head_w": spec((cfg.dims[-1], cfg.n_classes), ("fsdp", "tensor"),
+                       dtype=dt, init="fan_in"),
+        "head_b": spec((cfg.n_classes,), ("tensor",), dtype=dt, init="zeros"),
+        "final_ln_w": spec((cfg.dims[-1],), (None,), dtype=dt, init="ones"),
+        "final_ln_b": spec((cfg.dims[-1],), (None,), dtype=dt, init="zeros"),
+    }
+    for si, (n, d) in enumerate(zip(cfg.depths, cfg.dims)):
+        if si > 0:
+            p[f"down{si}_ln_w"] = spec((cfg.dims[si - 1],), (None,), dtype=dt, init="ones")
+            p[f"down{si}_ln_b"] = spec((cfg.dims[si - 1],), (None,), dtype=dt, init="zeros")
+            p[f"down{si}_conv"] = spec((2, 2, cfg.dims[si - 1], d),
+                                       (None, None, None, "tensor"), dtype=dt,
+                                       init="fan_in")
+        p[f"s{si}"] = {
+            "dw": spec((n, 7, 7, 1, d), (None, None, None, None, "tensor"),
+                       dtype=dt, init="fan_in"),
+            "ln_w": spec((n, d), (None, None), dtype=dt, init="ones"),
+            "ln_b": spec((n, d), (None, None), dtype=dt, init="zeros"),
+            "w1": spec((n, d, 4 * d), (None, "fsdp", "tensor"), dtype=dt, init="fan_in"),
+            "b1": spec((n, 4 * d), (None, "tensor"), dtype=dt, init="zeros"),
+            "w2": spec((n, 4 * d, d), (None, "tensor", "fsdp"), dtype=dt, init="fan_in"),
+            "b2": spec((n, d), (None, None), dtype=dt, init="zeros"),
+            "gamma": spec((n, d), (None, None), dtype=dt, init="ones",
+                          scale=cfg.ls_init),
+        }
+    return p
+
+
+def _block(x, p):
+    d = x.shape[-1]
+    h = lax.conv_general_dilated(
+        x, p["dw"].astype(x.dtype), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=d,
+        ).astype(x.dtype)
+    h = L.layer_norm(h, p["ln_w"], p["ln_b"])
+    h = jnp.einsum("bhwc,cf->bhwf", h, p["w1"], preferred_element_type=f32)
+    h = jax.nn.gelu(h + p["b1"].astype(f32)).astype(x.dtype)
+    h = jnp.einsum("bhwf,fc->bhwc", h, p["w2"])     # bf16 wire for TP psum
+    h = (h.astype(f32) + p["b2"].astype(f32)) * p["gamma"].astype(f32)
+    return L.constrain(x + h.astype(x.dtype), "batch", None, None, None)
+
+
+def forward(params, cfg: ConvNeXtConfig, images):
+    x = images.astype(cfg.dtype)
+    x = lax.conv_general_dilated(
+        x, params["stem_conv"].astype(x.dtype), window_strides=(4, 4),
+        padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ).astype(cfg.dtype)
+    x = L.layer_norm(x, params["stem_ln_w"], params["stem_ln_b"])
+    for si in range(4):
+        if si > 0:
+            x = L.layer_norm(x, params[f"down{si}_ln_w"], params[f"down{si}_ln_b"])
+            x = lax.conv_general_dilated(
+                x, params[f"down{si}_conv"].astype(x.dtype),
+                window_strides=(2, 2), padding="VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                ).astype(cfg.dtype)
+
+        def body(x, p):
+            return _block(x, p), None
+
+        x, _ = lax.scan(jax.checkpoint(body), x, params[f"s{si}"],
+                        unroll=L.scan_unroll(int(cfg.depths[si])))
+    x = x.astype(f32).mean(axis=(1, 2)).astype(cfg.dtype)
+    x = L.layer_norm(x[:, None], params["final_ln_w"], params["final_ln_b"])[:, 0]
+    logits = jnp.einsum("bd,dc->bc", x, params["head_w"],
+                        preferred_element_type=f32) + params["head_b"].astype(f32)
+    return logits
+
+
+def loss_fn(params, cfg: ConvNeXtConfig, batch):
+    logits = forward(params, cfg, batch["images"])
+    from repro.models.transformer_lm import softmax_xent
+    return softmax_xent(logits, batch["labels"])

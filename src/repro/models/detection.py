@@ -1,0 +1,183 @@
+"""Anchor-free detection head + tiny CPU-trainable detector + F1 metric.
+
+The paper evaluates object detection (Faster R-CNN / YOLOv5, F1@IoU0.5).
+Here the head is FCOS-style (per-cell objectness + center offset + size)
+and attaches to any vision backbone from the zoo; ``TinyDetector`` is a
+small convnet used by the end-to-end CPU examples and the serving sim.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.params import spec, init_params
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyDetectorConfig:
+    channels: tuple[int, ...] = (16, 32, 64)
+    stride: int = 8               # output cell size in px
+    dtype: str = "float32"
+
+
+def param_specs(cfg: TinyDetectorConfig):
+    dt = jnp.dtype(cfg.dtype)
+    p = {}
+    cin = 1
+    for i, c in enumerate(cfg.channels):
+        p[f"conv{i}"] = spec((3, 3, cin, c), (None, None, None, "tensor"),
+                             dtype=dt, init="fan_in")
+        p[f"bias{i}"] = spec((c,), (None,), dtype=dt, init="zeros")
+        cin = c
+    p["head"] = spec((1, 1, cin, 5), (None, None, None, None), dtype=dt,
+                     init="fan_in")
+    p["head_b"] = spec((5,), (None,), dtype=dt, init="zeros")
+    return p
+
+
+def init(key, cfg: TinyDetectorConfig):
+    return init_params(key, param_specs(cfg))
+
+
+def forward(params, cfg: TinyDetectorConfig, frames):
+    """frames: (B, H, W) [0..255] -> (B, H/s, W/s, 5) raw head output.
+
+    Channels: [objectness logit, dy, dx, log h, log w].
+    """
+    x = (frames.astype(f32) / 255.0 - 0.5)[..., None]
+    n_down = {2: 1, 4: 2, 8: 3}[cfg.stride]
+    for i, c in enumerate(cfg.channels):
+        stride = 2 if i < n_down else 1
+        x = lax.conv_general_dilated(
+            x, params[f"conv{i}"], window_strides=(stride, stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"bias{i}"])
+    x = lax.conv_general_dilated(
+        x, params["head"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["head_b"]
+    return x
+
+
+def decode_boxes(raw, cfg: TinyDetectorConfig, score_thresh: float = 0.5):
+    """-> (boxes (B, Nc, 4) cxcywh px, scores (B, Nc)).  Nc = all cells."""
+    B, hc, wc, _ = raw.shape
+    s = cfg.stride
+    obj = jax.nn.sigmoid(raw[..., 0])
+    cy = (jnp.arange(hc, dtype=f32)[None, :, None] + 0.5 +
+          jnp.tanh(raw[..., 1])) * s
+    cx = (jnp.arange(wc, dtype=f32)[None, None, :] + 0.5 +
+          jnp.tanh(raw[..., 2])) * s
+    h = jnp.exp(jnp.clip(raw[..., 3], -3, 3)) * s
+    w = jnp.exp(jnp.clip(raw[..., 4], -3, 3)) * s
+    boxes = jnp.stack([jnp.broadcast_to(cy, obj.shape),
+                       jnp.broadcast_to(cx, obj.shape), h, w], axis=-1)
+    return boxes.reshape(B, -1, 4), obj.reshape(B, -1)
+
+
+def _cell_targets(boxes, valid, hc: int, wc: int, stride: int):
+    """Rasterize GT boxes onto the output grid.  boxes: (N,4) cxcywh."""
+    cy = (jnp.arange(hc, dtype=f32)[:, None] + 0.5) * stride
+    cx = (jnp.arange(wc, dtype=f32)[None, :] + 0.5) * stride
+    d2 = (boxes[:, None, None, 0] - cy[None]) ** 2 \
+        + (boxes[:, None, None, 1] - cx[None]) ** 2   # (N, hc, wc)
+    d2 = jnp.where(valid[:, None, None], d2, jnp.inf)
+    nearest = jnp.argmin(d2, axis=0)                   # (hc, wc)
+    nearest_d2 = jnp.min(d2, axis=0)
+    tgt = boxes[nearest]                               # (hc, wc, 4)
+    # positive if cell center inside the matched box
+    inside = (jnp.abs(cy - tgt[..., 0]) <= tgt[..., 2] / 2) & \
+             (jnp.abs(cx - tgt[..., 1]) <= tgt[..., 3] / 2) & \
+             jnp.isfinite(nearest_d2)
+    return tgt, inside
+
+
+def loss_fn(params, cfg: TinyDetectorConfig, frames, boxes, valid):
+    """frames (B,H,W); boxes (B,N,4); valid (B,N)."""
+    raw = forward(params, cfg, frames)
+    B, hc, wc, _ = raw.shape
+    s = cfg.stride
+    tgt, pos = jax.vmap(lambda b, v: _cell_targets(b, v, hc, wc, s))(
+        boxes, valid)
+    obj_logit = raw[..., 0]
+    obj_loss = jnp.mean(
+        jnp.maximum(obj_logit, 0) - obj_logit * pos
+        + jnp.log1p(jnp.exp(-jnp.abs(obj_logit))))
+    cyc = (jnp.arange(hc, dtype=f32)[None, :, None] + 0.5) * s
+    cxc = (jnp.arange(wc, dtype=f32)[None, None, :] + 0.5) * s
+    t_dy = (tgt[..., 0] - cyc) / s
+    t_dx = (tgt[..., 1] - cxc) / s
+    t_lh = jnp.log(jnp.maximum(tgt[..., 2] / s, 1e-3))
+    t_lw = jnp.log(jnp.maximum(tgt[..., 3] / s, 1e-3))
+    reg = (jnp.tanh(raw[..., 1]) - jnp.clip(t_dy, -1, 1)) ** 2 \
+        + (jnp.tanh(raw[..., 2]) - jnp.clip(t_dx, -1, 1)) ** 2 \
+        + (jnp.clip(raw[..., 3], -3, 3) - jnp.clip(t_lh, -3, 3)) ** 2 \
+        + (jnp.clip(raw[..., 4], -3, 3) - jnp.clip(t_lw, -3, 3)) ** 2
+    reg_loss = jnp.sum(reg * pos) / jnp.maximum(pos.sum(), 1.0)
+    return obj_loss + 0.5 * reg_loss
+
+
+# --------------------------------------------------------------------------
+# Metrics
+# --------------------------------------------------------------------------
+def iou_cxcywh(a, b):
+    """a: (..., 4), b: (..., 4) -> IoU."""
+    ay0, ay1 = a[..., 0] - a[..., 2] / 2, a[..., 0] + a[..., 2] / 2
+    ax0, ax1 = a[..., 1] - a[..., 3] / 2, a[..., 1] + a[..., 3] / 2
+    by0, by1 = b[..., 0] - b[..., 2] / 2, b[..., 0] + b[..., 2] / 2
+    bx0, bx1 = b[..., 1] - b[..., 3] / 2, b[..., 1] + b[..., 3] / 2
+    iy = jnp.maximum(jnp.minimum(ay1, by1) - jnp.maximum(ay0, by0), 0)
+    ix = jnp.maximum(jnp.minimum(ax1, bx1) - jnp.maximum(ax0, bx0), 0)
+    inter = iy * ix
+    union = a[..., 2] * a[..., 3] + b[..., 2] * b[..., 3] - inter
+    return inter / jnp.maximum(union, 1e-9)
+
+
+def greedy_nms(boxes, scores, iou_thresh: float = 0.5, top_k: int = 32):
+    """Simple greedy NMS over the top_k highest-scoring cells
+    (jit-compatible: static shapes, mask-based suppression)."""
+    k = min(top_k, scores.shape[0])
+    sc, idx = lax.top_k(scores, k)
+    bx = boxes[idx]
+    rank = jnp.arange(k)
+
+    def body(i, keep):
+        ious = iou_cxcywh(bx[i][None], bx)[0]          # (k,)
+        suppressed = jnp.any((ious > iou_thresh) & (rank < i) & (keep > 0))
+        return keep.at[i].set(jnp.where(suppressed, 0.0, keep[i]))
+
+    keep = jnp.ones((k,), f32)
+    keep = lax.fori_loop(1, k, body, keep)
+    return bx, sc * keep
+
+
+def f1_score(pred_boxes, pred_scores, gt_boxes, gt_valid,
+             iou_thresh: float = 0.5, score_thresh: float = 0.5):
+    """Greedy matching F1@IoU for a single frame (jit-compatible)."""
+    iou = iou_cxcywh(pred_boxes[:, None], gt_boxes[None])      # (P, G)
+    conf = pred_scores > score_thresh
+    iou = iou * conf[:, None] * gt_valid[None]
+
+    def match_one(carry, _):
+        iou_m, tp = carry
+        flat = jnp.argmax(iou_m)
+        pi, gi = flat // iou_m.shape[1], flat % iou_m.shape[1]
+        best = iou_m[pi, gi]
+        hit = best >= iou_thresh
+        iou_m = jnp.where(hit, iou_m.at[pi, :].set(0.0).at[:, gi].set(0.0),
+                          iou_m)
+        return (iou_m, tp + hit.astype(f32)), None
+
+    n = min(iou.shape[0], iou.shape[1])
+    (iou_f, tp), _ = lax.scan(match_one, (iou, 0.0), None, length=n)
+    n_pred = conf.sum()
+    n_gt = gt_valid.sum()
+    prec = tp / jnp.maximum(n_pred, 1e-9)
+    rec = tp / jnp.maximum(n_gt, 1e-9)
+    return jnp.where(n_gt > 0,
+                     2 * prec * rec / jnp.maximum(prec + rec, 1e-9),
+                     jnp.where(n_pred > 0, 0.0, 1.0))

@@ -1,0 +1,224 @@
+"""Diffusion Transformer (DiT) with adaLN-Zero conditioning [arXiv:2212.09748].
+
+Operates on VAE latents (img_res/8, 4 channels); the VAE frontend is a stub
+per DESIGN.md §4 — ``input_specs`` provide latents directly.
+
+train_step: noise-prediction MSE at a random timestep (t, noise supplied by
+the data pipeline for determinism).  serve_step: one DDIM denoising step —
+a steps-step sampler is ``steps`` calls to serve_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import spec
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    name: str
+    img_res: int                  # pixel resolution of the *default* shape
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_classes: int = 1000
+    latent_channels: int = 4
+    vae_factor: int = 8
+    dtype: str = "bfloat16"
+    remat: bool = True
+    max_latent: int = 128         # pos-emb sized for largest (1024/8)
+
+    @property
+    def mlp_ratio(self) -> int:
+        return 4
+
+    def latent_res(self, img_res: int) -> int:
+        return img_res // self.vae_factor
+
+    def n_tokens(self, img_res: int) -> int:
+        return (self.latent_res(img_res) // self.patch) ** 2
+
+    def param_count(self) -> int:
+        from repro.models.params import param_count
+        return param_count(param_specs(self))
+
+
+def param_specs(cfg: DiTConfig):
+    Ln, d, H = cfg.n_layers, cfg.d_model, cfg.n_heads
+    Dh = d // H
+    ff = d * cfg.mlp_ratio
+    dt = jnp.dtype(cfg.dtype)
+    in_dim = cfg.patch * cfg.patch * cfg.latent_channels
+    max_tokens = (cfg.max_latent // cfg.patch) ** 2
+    blk = {
+        "adaln_w": spec((Ln, d, 6 * d), (None, "fsdp", "tensor"), dtype=dt,
+                        init="zeros"),
+        "adaln_b": spec((Ln, 6 * d), (None, "tensor"), dtype=dt, init="zeros"),
+        "wq": spec((Ln, d, H, Dh), (None, "fsdp", "tensor", None), dtype=dt, init="fan_in"),
+        "wk": spec((Ln, d, H, Dh), (None, "fsdp", "tensor", None), dtype=dt, init="fan_in"),
+        "wv": spec((Ln, d, H, Dh), (None, "fsdp", "tensor", None), dtype=dt, init="fan_in"),
+        "wo": spec((Ln, H, Dh, d), (None, "tensor", None, "fsdp"), dtype=dt, init="fan_in"),
+        "w1": spec((Ln, d, ff), (None, "fsdp", "tensor"), dtype=dt, init="fan_in"),
+        "b1": spec((Ln, ff), (None, "tensor"), dtype=dt, init="zeros"),
+        "w2": spec((Ln, ff, d), (None, "tensor", "fsdp"), dtype=dt, init="fan_in"),
+        "b2": spec((Ln, d), (None, None), dtype=dt, init="zeros"),
+    }
+    return {
+        "patch_w": spec((in_dim, d), (None, "tensor"), dtype=dt, init="fan_in"),
+        "patch_b": spec((d,), ("tensor",), dtype=dt, init="zeros"),
+        "pos_embed": spec((max_tokens, d), (None, None), dtype=dt),
+        "t_mlp1": spec((256, d), (None, "tensor"), dtype=dt, init="fan_in"),
+        "t_mlp1_b": spec((d,), ("tensor",), dtype=dt, init="zeros"),
+        "t_mlp2": spec((d, d), ("fsdp", "tensor"), dtype=dt, init="fan_in"),
+        "t_mlp2_b": spec((d,), ("tensor",), dtype=dt, init="zeros"),
+        "y_embed": spec((cfg.n_classes + 1, d), (None, "tensor"), dtype=dt),
+        "blocks": blk,
+        "final_adaln_w": spec((d, 2 * d), ("fsdp", "tensor"), dtype=dt, init="zeros"),
+        "final_adaln_b": spec((2 * d,), ("tensor",), dtype=dt, init="zeros"),
+        "final_ln_w": spec((d,), (None,), dtype=dt, init="ones"),
+        "final_w": spec((d, in_dim), ("fsdp", None), dtype=dt, init="zeros"),
+        "final_b": spec((in_dim,), (None,), dtype=dt, init="zeros"),
+    }
+
+
+def timestep_embedding(t, dim: int = 256):
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=f32) / half)
+    ang = t.astype(f32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None]) + shift[:, None]
+
+
+def _block(cfg, p, x, c):
+    """x: (B, S, d) tokens, c: (B, d) conditioning."""
+    B, S, d = x.shape
+    mod = jnp.einsum("bd,df->bf", c, p["adaln_w"],
+                     preferred_element_type=f32) + p["adaln_b"].astype(f32)
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+    ones = jnp.ones((d,), x.dtype)
+    zeros = jnp.zeros((d,), x.dtype)
+    h = L.layer_norm(x, ones, zeros).astype(f32)
+    h = _modulate(h, sh1, sc1).astype(x.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"], preferred_element_type=f32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"], preferred_element_type=f32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"], preferred_element_type=f32).astype(x.dtype)
+    o = L.chunked_attention(q, k, v, causal=False, chunk=min(1024, S))
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"])     # bf16 wire for TP psum
+    x = L.constrain(x + (g1[:, None] * o.astype(f32)).astype(x.dtype),
+                    "batch", None, None)
+    h = L.layer_norm(x, ones, zeros).astype(f32)
+    h = _modulate(h, sh2, sc2).astype(x.dtype)
+    h = L.gelu_mlp(h, p["w1"], p["b1"], p["w2"], p["b2"])
+    x = L.constrain(x + (g2[:, None] * h.astype(f32)).astype(x.dtype),
+                    "batch", None, None)
+    return x
+
+
+def patchify(latents, patch: int):
+    B, Hh, Ww, C = latents.shape
+    hp, wp = Hh // patch, Ww // patch
+    x = latents.reshape(B, hp, patch, wp, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, hp * wp, patch * patch * C)
+    return x, (hp, wp)
+
+
+def unpatchify(x, hw, patch: int, channels: int):
+    B = x.shape[0]
+    hp, wp = hw
+    x = x.reshape(B, hp, wp, patch, patch, channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, hp * patch, wp * patch, channels)
+    return x
+
+
+def forward(params, cfg: DiTConfig, latents, t, y):
+    """Noise prediction eps_theta(x_t, t, y).  latents: (B, h, w, C)."""
+    x, hw = patchify(latents.astype(cfg.dtype), cfg.patch)
+    S = x.shape[1]
+    x = jnp.einsum("bsi,id->bsd", x, params["patch_w"],
+                   preferred_element_type=f32) + params["patch_b"].astype(f32)
+    x = x.astype(cfg.dtype) + params["pos_embed"][:S].astype(cfg.dtype)[None]
+    temb = timestep_embedding(t)
+    temb = jnp.einsum("bi,id->bd", temb, params["t_mlp1"].astype(f32)) + params["t_mlp1_b"].astype(f32)
+    temb = jax.nn.silu(temb)
+    temb = jnp.einsum("bi,id->bd", temb, params["t_mlp2"].astype(f32)) + params["t_mlp2_b"].astype(f32)
+    yemb = params["y_embed"].at[y].get(mode="clip").astype(f32)
+    c = (temb + yemb).astype(cfg.dtype)
+
+    def body(x, p):
+        return _block(cfg, p, x, c), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(fn, x, params["blocks"],
+                    unroll=L.scan_unroll(cfg.n_layers))
+    mod = jnp.einsum("bd,df->bf", c, params["final_adaln_w"],
+                     preferred_element_type=f32) + params["final_adaln_b"].astype(f32)
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    ones = jnp.ones((cfg.d_model,), x.dtype)
+    zeros = jnp.zeros((cfg.d_model,), x.dtype)
+    x = _modulate(L.layer_norm(x, ones, zeros).astype(f32), sh, sc)
+    x = jnp.einsum("bsd,di->bsi", x.astype(cfg.dtype), params["final_w"],
+                   preferred_element_type=f32) + params["final_b"].astype(f32)
+    return unpatchify(x.astype(f32), hw, cfg.patch, cfg.latent_channels)
+
+
+# DDPM cosine schedule ------------------------------------------------------
+def alpha_bar(t, T: int = 1000):
+    s = 0.008
+    tt = t.astype(f32) / T
+    return jnp.cos((tt + s) / (1 + s) * jnp.pi / 2) ** 2
+
+
+def loss_fn(params, cfg: DiTConfig, batch):
+    """batch: latents (clean), t (B,), noise (B,h,w,C), labels (B,)."""
+    x0, t, eps, y = (batch["latents"], batch["t"], batch["noise"],
+                     batch["labels"])
+    ab = alpha_bar(t)[:, None, None, None]
+    xt = jnp.sqrt(ab) * x0.astype(f32) + jnp.sqrt(1 - ab) * eps.astype(f32)
+    pred = forward(params, cfg, xt, t, y)
+    return jnp.mean(jnp.square(pred - eps.astype(f32)))
+
+
+def ddim_update(xt, eps, t, t_prev):
+    """Deterministic DDIM update x_t -> x_{t_prev} given a noise estimate."""
+    ab_t = alpha_bar(t)[:, None, None, None]
+    ab_p = alpha_bar(t_prev)[:, None, None, None]
+    x0 = (xt.astype(f32) - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+    return jnp.sqrt(ab_p) * x0 + jnp.sqrt(1 - ab_p) * eps
+
+
+def ddim_step(params, cfg: DiTConfig, xt, t, t_prev, y):
+    """One DDIM step (fresh DNN forward)."""
+    eps = forward(params, cfg, xt, t, y)
+    return ddim_update(xt, eps, t, t_prev)
+
+
+def sample_with_cache(params, cfg: DiTConfig, x, timesteps, y,
+                      refresh_every: int = 2):
+    """Step-cached sampling — BiSwift's reuse pipeline (③) mapped to
+    diffusion serving (DESIGN.md §4): the noise estimate is refreshed by
+    the DNN every ``refresh_every`` steps and *reused* in between
+    (DeepCache-style), cutting sampler FLOPs by ~(1 − 1/refresh_every).
+
+    timesteps: decreasing (n_steps+1,) int sequence; returns the final x.
+    """
+    eps = None
+    fwd = jax.jit(lambda x, t: forward(params, cfg, x, t, y))
+    for i in range(len(timesteps) - 1):
+        t = jnp.full((x.shape[0],), int(timesteps[i]), jnp.int32)
+        tp = jnp.full((x.shape[0],), int(timesteps[i + 1]), jnp.int32)
+        if eps is None or i % refresh_every == 0:
+            eps = fwd(x, t)
+        x = ddim_update(x, eps, t, tp)
+    return x

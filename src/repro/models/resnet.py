@@ -1,0 +1,199 @@
+"""ResNet-v1.5 (bottleneck) — resnet-50 (3-4-6-3) and resnet-152 (3-8-36-3).
+
+BatchNorm keeps running stats in a separate ``batch_stats`` collection; the
+train step computes batch statistics (and returns updated running stats),
+eval uses the running stats.  Stage blocks of equal geometry are stacked and
+scanned to bound compile time (36-deep stage 3 of resnet-152 is one scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.params import spec
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    depths: tuple[int, int, int, int]
+    width: int = 64
+    n_classes: int = 1000
+    dtype: str = "bfloat16"
+    bn_momentum: float = 0.9
+
+    def param_count(self) -> int:
+        from repro.models.params import param_count
+        return param_count(param_specs(self)["params"])
+
+
+def _conv_spec(n, kh, kw, cin, cout, dt):
+    return spec((n, kh, kw, cin, cout), (None, None, None, None, "tensor"),
+                dtype=dt, init="fan_in")
+
+
+def _bn_specs(n, c, dt):
+    return {
+        "scale": spec((n, c), (None, None), dtype=jnp.float32, init="ones"),
+        "bias": spec((n, c), (None, None), dtype=jnp.float32, init="zeros"),
+    }
+
+
+def _bn_stats(n, c):
+    return {
+        "mean": spec((n, c), (None, None), dtype=jnp.float32, init="zeros"),
+        "var": spec((n, c), (None, None), dtype=jnp.float32, init="ones"),
+    }
+
+
+def stage_channels(cfg: ResNetConfig):
+    w = cfg.width
+    return [(w * (2 ** i), w * (2 ** i) * 4) for i in range(4)]  # (mid, out)
+
+
+def param_specs(cfg: ResNetConfig):
+    dt = jnp.dtype(cfg.dtype)
+    params = {
+        "stem_conv": _conv_spec(1, 7, 7, 3, cfg.width, dt),
+        "stem_bn": _bn_specs(1, cfg.width, dt),
+        "head_w": spec((cfg.width * 32, cfg.n_classes), ("fsdp", "tensor"),
+                       dtype=dt, init="fan_in"),
+        "head_b": spec((cfg.n_classes,), ("tensor",), dtype=dt, init="zeros"),
+    }
+    stats = {"stem_bn": _bn_stats(1, cfg.width)}
+    chans = stage_channels(cfg)
+    in_c = cfg.width
+    for si, (n_blocks, (mid, out)) in enumerate(zip(cfg.depths, chans)):
+        # downsample/projection block (first of stage)
+        params[f"s{si}_proj"] = {
+            "conv0": _conv_spec(1, 1, 1, in_c, mid, dt),
+            "bn0": _bn_specs(1, mid, dt),
+            "conv1": _conv_spec(1, 3, 3, mid, mid, dt),
+            "bn1": _bn_specs(1, mid, dt),
+            "conv2": _conv_spec(1, 1, 1, mid, out, dt),
+            "bn2": _bn_specs(1, out, dt),
+            "convp": _conv_spec(1, 1, 1, in_c, out, dt),
+            "bnp": _bn_specs(1, out, dt),
+        }
+        stats[f"s{si}_proj"] = {
+            "bn0": _bn_stats(1, mid), "bn1": _bn_stats(1, mid),
+            "bn2": _bn_stats(1, out), "bnp": _bn_stats(1, out),
+        }
+        # identity blocks (stacked, scanned)
+        n_id = n_blocks - 1
+        if n_id:
+            params[f"s{si}_blocks"] = {
+                "conv0": _conv_spec(n_id, 1, 1, out, mid, dt),
+                "bn0": _bn_specs(n_id, mid, dt),
+                "conv1": _conv_spec(n_id, 3, 3, mid, mid, dt),
+                "bn1": _bn_specs(n_id, mid, dt),
+                "conv2": _conv_spec(n_id, 1, 1, mid, out, dt),
+                "bn2": _bn_specs(n_id, out, dt),
+            }
+            stats[f"s{si}_blocks"] = {
+                "bn0": _bn_stats(n_id, mid), "bn1": _bn_stats(n_id, mid),
+                "bn2": _bn_stats(n_id, out),
+            }
+        in_c = out
+    return {"params": params, "batch_stats": stats}
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ).astype(x.dtype)
+
+
+def _bn(x, p, stats, train: bool, momentum: float):
+    """Returns (y, new_stats)."""
+    if train:
+        xf = x.astype(f32)
+        mean = xf.mean(axis=(0, 1, 2))
+        var = xf.var(axis=(0, 1, 2))
+        new = {
+            "mean": momentum * stats["mean"] + (1 - momentum) * mean,
+            "var": momentum * stats["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = stats["mean"], stats["var"]
+        new = stats
+    y = (x.astype(f32) - mean) * lax.rsqrt(var + 1e-5)
+    y = y * p["scale"] + p["bias"]
+    return y.astype(x.dtype), new
+
+
+def _bottleneck(x, p, st, train, momentum, stride=1, project=False):
+    new_st = {}
+    h, new_st["bn0"] = _bn(_conv(x, p["conv0"][0]), _tree0(p["bn0"]),
+                           _tree0(st["bn0"]), train, momentum)
+    h = jax.nn.relu(h)
+    h, new_st["bn1"] = _bn(_conv(h, p["conv1"][0], stride=stride),
+                           _tree0(p["bn1"]), _tree0(st["bn1"]), train, momentum)
+    h = jax.nn.relu(h)
+    h, new_st["bn2"] = _bn(_conv(h, p["conv2"][0]), _tree0(p["bn2"]),
+                           _tree0(st["bn2"]), train, momentum)
+    if project:
+        sc, new_st["bnp"] = _bn(_conv(x, p["convp"][0], stride=stride),
+                                _tree0(p["bnp"]), _tree0(st["bnp"]), train,
+                                momentum)
+    else:
+        sc = x
+    from repro.models import layers as L
+    return L.constrain(jax.nn.relu(h + sc), "batch", None, None, None), new_st
+
+
+def _tree0(t):
+    return jax.tree.map(lambda a: a[0] if a.ndim >= 1 else a, t)
+
+
+def _tree_expand(t):
+    return jax.tree.map(lambda a: a[None], t)
+
+
+def forward(variables, cfg: ResNetConfig, images, train: bool = False):
+    """Returns (logits, new_batch_stats)."""
+    p, st = variables["params"], variables["batch_stats"]
+    mom = cfg.bn_momentum
+    new_st = {}
+    x = images.astype(cfg.dtype)
+    x = _conv(x, p["stem_conv"][0], stride=2)
+    x, s = _bn(x, _tree0(p["stem_bn"]), _tree0(st["stem_bn"]), train, mom)
+    new_st["stem_bn"] = _tree_expand(s)
+    x = jax.nn.relu(x)
+    x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 3, 3, 1), (1, 2, 2, 1),
+                          "SAME")
+    for si, n_blocks in enumerate(cfg.depths):
+        stride = 1 if si == 0 else 2
+        x, s = _bottleneck(x, p[f"s{si}_proj"], st[f"s{si}_proj"], train, mom,
+                           stride=stride, project=True)
+        new_st[f"s{si}_proj"] = _tree_expand(s)
+        n_id = n_blocks - 1
+        if n_id:
+            bp, bs = p[f"s{si}_blocks"], st[f"s{si}_blocks"]
+
+            def body(x, inp):
+                pp, ss = inp
+                y, ns = _bottleneck(x, _tree_expand(pp), _tree_expand(ss),
+                                    train, mom)
+                return y, ns  # scan stacks per-block stats back to (n_id, c)
+
+            from repro.models import layers as L
+            x, ns = lax.scan(jax.checkpoint(body), x, (bp, bs),
+                             unroll=L.scan_unroll(n_id))
+            new_st[f"s{si}_blocks"] = ns
+    x = x.astype(f32).mean(axis=(1, 2)).astype(cfg.dtype)  # global avg pool
+    logits = jnp.einsum("bd,dc->bc", x, p["head_w"],
+                        preferred_element_type=f32) + p["head_b"].astype(f32)
+    return logits, new_st
+
+
+def loss_fn(variables, cfg: ResNetConfig, batch):
+    logits, new_st = forward(variables, cfg, batch["images"], train=True)
+    from repro.models.transformer_lm import softmax_xent
+    return softmax_xent(logits, batch["labels"]), new_st

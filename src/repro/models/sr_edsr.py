@@ -1,0 +1,78 @@
+"""EDSR-lite super-resolution (the neural-enhancement module used by the
+AccDecoder / NeuroScaler* baselines; paper §II).
+
+Conv -> N residual blocks -> nearest-upsample + conv refinement.  Small
+enough to train on CPU in the examples; on the edge GPU the paper reports
+~135 ms swap overhead per stream-specialized model — the motivation for
+BiSwift's HD-anchor approach (Insight #2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.params import spec, init_params
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class EDSRConfig:
+    channels: int = 16
+    n_blocks: int = 4
+    scale: int = 2
+
+
+def param_specs(cfg: EDSRConfig):
+    c = cfg.channels
+    p = {
+        "head": spec((3, 3, 1, c), (None, None, None, "tensor"), dtype=f32,
+                     init="fan_in"),
+        "tail": spec((3, 3, c, 1), (None, None, "tensor", None), dtype=f32,
+                     init="fan_in"),
+        "blocks": {
+            "w1": spec((cfg.n_blocks, 3, 3, c, c),
+                       (None, None, None, None, "tensor"), dtype=f32,
+                       init="fan_in"),
+            "w2": spec((cfg.n_blocks, 3, 3, c, c),
+                       (None, None, None, "tensor", None), dtype=f32,
+                       init="fan_in"),
+        },
+    }
+    return p
+
+
+def init(key, cfg: EDSRConfig):
+    return init_params(key, param_specs(cfg))
+
+
+def _conv(x, w):
+    return lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def forward(params, cfg: EDSRConfig, frames):
+    """frames: (B, h, w) [0..255] -> (B, h*scale, w*scale)."""
+    x = (frames.astype(f32) / 255.0)[..., None]
+    x = _conv(x, params["head"])
+
+    def body(x, p):
+        h = jax.nn.relu(_conv(x, p["w1"]))
+        return x + 0.1 * _conv(h, p["w2"]), None
+
+    x, _ = lax.scan(body, x, params["blocks"])
+    s = cfg.scale
+    B, h, w, c = x.shape
+    x = jnp.repeat(jnp.repeat(x, s, axis=1), s, axis=2)   # nearest base
+    x = _conv(x, params["tail"])[..., 0] + jnp.repeat(
+        jnp.repeat(frames.astype(f32) / 255.0, s, axis=1), s, axis=2)
+    return jnp.clip(x * 255.0, 0.0, 255.0)
+
+
+def loss_fn(params, cfg: EDSRConfig, lr_frames, hd_frames):
+    out = forward(params, cfg, lr_frames)
+    return jnp.mean(jnp.square(out - hd_frames.astype(f32))) / (255.0 ** 2)

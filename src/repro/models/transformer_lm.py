@@ -1,0 +1,369 @@
+"""Decoder-only LM family: llama3, chatglm3, qwen2-moe, mixtral.
+
+One config dataclass covers all four assigned LM architectures:
+  * GQA with arbitrary kv-head count (llama 8, chatglm 2, qwen 16, mixtral 8)
+  * RoPE with a rotated fraction (chatglm "2d RoPE" rotates half the head dim)
+  * optional sliding-window attention (mixtral)
+  * optional MoE FFN with shared experts (qwen: 4 shared + 60 routed top-4;
+    mixtral: 8 routed top-2)
+
+Layers are stacked (L, ...) and scanned; remat is applied per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import ParamSpec, spec
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0
+    rope_fraction: float = 1.0
+    rope_theta: float = 500000.0
+    window: Optional[int] = None          # SWA window (mixtral)
+    moe: Optional[L.MoEConfig] = None
+    d_ff_shared: int = 0                  # qwen shared-expert width
+    qkv_bias: bool = False                # qwen
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    remat: bool = True
+    attn_chunk: int = 1024
+    q_block: int = 1024
+    aux_loss_coef: float = 0.01
+    attention_impl: str = "xla"           # xla | pallas (flash kernel)
+    kv_cache_dtype: str = "bfloat16"      # bfloat16 | int8 (quantized cache)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.window is not None
+
+    def param_count(self) -> int:
+        from repro.models.params import param_count
+        return param_count(param_specs(self))
+
+    def active_param_count(self) -> int:
+        """6·N_active·D convention: MoE counts only top-k + shared experts."""
+        if self.moe is None:
+            return self.param_count()
+        c = self.param_count()
+        per_expert = 3 * self.d_model * self.d_ff
+        inactive = (self.moe.n_experts - self.moe.top_k) * per_expert
+        return c - self.n_layers * inactive
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+def param_specs(cfg: LMConfig):
+    Ln, d, H, Hk, Dh = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                        cfg.n_kv_heads, cfg.head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    blk = {
+        "ln1": spec((Ln, d), (None, None), dtype=dt, init="ones"),
+        "ln2": spec((Ln, d), (None, None), dtype=dt, init="ones"),
+        "wq": spec((Ln, d, H, Dh), (None, "fsdp", "tensor", None), dtype=dt,
+                   init="fan_in"),
+        "wk": spec((Ln, d, Hk, Dh), (None, "fsdp", "tensor", None), dtype=dt,
+                   init="fan_in"),
+        "wv": spec((Ln, d, Hk, Dh), (None, "fsdp", "tensor", None), dtype=dt,
+                   init="fan_in"),
+        "wo": spec((Ln, H, Dh, d), (None, "tensor", None, "fsdp"), dtype=dt,
+                   init="fan_in"),
+    }
+    if cfg.qkv_bias:
+        blk["bq"] = spec((Ln, H, Dh), (None, "tensor", None), dtype=dt,
+                         init="zeros")
+        blk["bk"] = spec((Ln, Hk, Dh), (None, "tensor", None), dtype=dt,
+                         init="zeros")
+        blk["bv"] = spec((Ln, Hk, Dh), (None, "tensor", None), dtype=dt,
+                         init="zeros")
+    if cfg.moe is None:
+        blk.update({
+            "w1": spec((Ln, d, cfg.d_ff), (None, "fsdp", "tensor"), dtype=dt,
+                       init="fan_in"),
+            "w3": spec((Ln, d, cfg.d_ff), (None, "fsdp", "tensor"), dtype=dt,
+                       init="fan_in"),
+            "w2": spec((Ln, cfg.d_ff, d), (None, "tensor", "fsdp"), dtype=dt,
+                       init="fan_in"),
+        })
+    else:
+        E = cfg.moe.n_experts
+        blk.update({
+            "w_router": spec((Ln, d, E), (None, "fsdp", None), dtype=dt,
+                             init="fan_in"),
+            "we1": spec((Ln, E, d, cfg.d_ff), (None, "expert", "fsdp", "tensor"),
+                        dtype=dt, init="fan_in"),
+            "we3": spec((Ln, E, d, cfg.d_ff), (None, "expert", "fsdp", "tensor"),
+                        dtype=dt, init="fan_in"),
+            "we2": spec((Ln, E, cfg.d_ff, d), (None, "expert", "tensor", "fsdp"),
+                        dtype=dt, init="fan_in"),
+        })
+        if cfg.d_ff_shared:
+            blk.update({
+                "ws1": spec((Ln, d, cfg.d_ff_shared), (None, "fsdp", "tensor"),
+                            dtype=dt, init="fan_in"),
+                "ws3": spec((Ln, d, cfg.d_ff_shared), (None, "fsdp", "tensor"),
+                            dtype=dt, init="fan_in"),
+                "ws2": spec((Ln, cfg.d_ff_shared, d), (None, "tensor", "fsdp"),
+                            dtype=dt, init="fan_in"),
+                "w_shared_gate": spec((Ln, d, 1), (None, "fsdp", None),
+                                      dtype=dt, init="fan_in"),
+            })
+    return {
+        # vocab on tensor axis only: a (V, d) table with d sharded would force
+        # the token gather to reshard d per row (pathological under SPMD).
+        "embed": spec((cfg.vocab, d), ("tensor", None), dtype=dt),
+        "blocks": blk,
+        "final_ln": spec((d,), (None,), dtype=dt, init="ones"),
+    }
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+def _ffn(cfg: LMConfig, p, x):
+    """Per-layer FFN; p holds this layer's (un-stacked) weights."""
+    if cfg.moe is None:
+        return L.swiglu(x, p["w1"], p["w3"], p["w2"]), 0.0
+    out, aux = L.moe_block(x, p["w_router"], p["we1"], p["we3"], p["we2"],
+                           cfg.moe)
+    if cfg.d_ff_shared:
+        sh = L.swiglu(x, p["ws1"], p["ws3"], p["ws2"])
+        gate = jax.nn.sigmoid(
+            jnp.einsum("bsd,dk->bsk", x.astype(f32), p["w_shared_gate"].astype(f32)))
+        out = out + (sh.astype(f32) * gate).astype(x.dtype)
+    return out, aux
+
+
+def _attn(cfg: LMConfig, p, x, positions, *, kv_override=None,
+          cache_positions=None, decode_pos=None):
+    """Returns (attn_out, (k, v)) for this layer."""
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"], preferred_element_type=f32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"], preferred_element_type=f32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"], preferred_element_type=f32)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(f32)
+        k = k + p["bk"].astype(f32)
+        v = v + p["bv"].astype(f32)
+    q, k, v = (L.constrain(t.astype(x.dtype), "batch", None, "tensor", None)
+               for t in (q, k, v))
+    q = L.apply_rope(q, positions, fraction=cfg.rope_fraction,
+                     theta=cfg.rope_theta)
+    k = L.apply_rope(k, positions, fraction=cfg.rope_fraction,
+                     theta=cfg.rope_theta)
+    if kv_override is not None:  # decode: attend over the cache
+        kc, vc = kv_override
+        o = L.decode_attention(q, kc, vc, cache_positions=cache_positions,
+                               pos=decode_pos, window=cfg.window)
+    elif cfg.attention_impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+        o = flash_attention(q, k, v, causal=True, window=cfg.window,
+                            q_blk=min(128, S), k_blk=min(128, S))
+    elif cfg.window is not None and S > cfg.q_block:
+        o = L.swa_attention(q, k, v, window=cfg.window, q_block=cfg.q_block)
+    else:
+        o = L.chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])   # bf16 wire for TP psum
+    return L.constrain(out.astype(x.dtype), "batch", None, None), (k, v)
+
+
+def forward(params, cfg: LMConfig, tokens, *, collect_cache: bool = False):
+    """Full-sequence forward (training / prefill).
+
+    Returns (logits, aux_loss, cache_kv) where cache_kv is (k, v) stacked
+    over layers if collect_cache else None.
+    """
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = params["embed"].at[tokens].get(mode="clip").astype(cfg.dtype)
+    x = L.constrain(x, "batch", None, None)
+
+    def layer(carry, p):
+        x, aux = carry
+        h, kv = _attn(cfg, p, L.rms_norm(x, p["ln1"], cfg.norm_eps), positions)
+        x = L.constrain(x + h, "batch", None, None)
+        h, a = _ffn(cfg, p, L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        x = L.constrain(x + h, "batch", None, None)
+        ys = kv if collect_cache else None
+        return (x, aux + a), ys
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    (x, aux), cache = lax.scan(layer_fn, (x, 0.0), params["blocks"],
+                               unroll=L.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                        preferred_element_type=f32)
+    logits = L.constrain(logits, "batch", None, "tensor")
+    return logits, aux, cache
+
+
+# --------------------------------------------------------------------------
+# Loss / train step
+# --------------------------------------------------------------------------
+def softmax_xent(logits, labels):
+    """Sharding-friendly CE: the gold logit is picked with a one-hot einsum
+    (partial per vocab shard + psum) instead of take_along_axis, which would
+    all-gather the full logits across the tensor axis."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("...v,...v->...", logits, onehot)
+    return (lse - gold).mean()
+
+
+def loss_fn(params, cfg: LMConfig, batch):
+    logits, aux, _ = forward(params, cfg, batch["tokens"])
+    ce = softmax_xent(logits, batch["labels"])
+    return ce + cfg.aux_loss_coef * aux / max(cfg.n_layers, 1)
+
+
+# --------------------------------------------------------------------------
+# Decode (serve_step)
+# --------------------------------------------------------------------------
+def cache_len(cfg: LMConfig, seq_len: int) -> int:
+    """Ring-buffer caches for SWA archs are bounded by the window."""
+    if cfg.window is not None:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def init_cache_specs(cfg: LMConfig, batch: int, seq_len: int):
+    Sc = cache_len(cfg, seq_len)
+    quant = cfg.kv_cache_dtype == "int8"
+    dt = jnp.int8 if quant else jnp.dtype(cfg.dtype)
+    specs = {
+        "k": spec((cfg.n_layers, batch, Sc, cfg.n_kv_heads, cfg.head_dim),
+                  (None, "batch", "seq_kv", None, None), dtype=dt,
+                  init="zeros"),
+        "v": spec((cfg.n_layers, batch, Sc, cfg.n_kv_heads, cfg.head_dim),
+                  (None, "batch", "seq_kv", None, None), dtype=dt,
+                  init="zeros"),
+        "slot_pos": spec((Sc,), (None,), dtype=jnp.int32, init="zeros"),
+    }
+    if quant:
+        # per-(batch, slot, head) scales: +1/head_dim relative overhead
+        for nm in ("k_scale", "v_scale"):
+            specs[nm] = spec((cfg.n_layers, batch, Sc, cfg.n_kv_heads),
+                             (None, "batch", "seq_kv", None),
+                             dtype=jnp.float32, init="ones")
+    return specs
+
+
+def _quantize_kv(x):
+    """(B, 1, Hk, D) -> (int8 values, (B, 1, Hk) scales)."""
+    scale = jnp.maximum(jnp.abs(x.astype(f32)).max(axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(f32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale):
+    return q.astype(jnp.bfloat16) * scale[..., None].astype(jnp.bfloat16)
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens, pos):
+    """One-token decode.  tokens: (B, 1) int32; pos: scalar int32 position.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    B = tokens.shape[0]
+    Sc = cache["k"].shape[2]
+    positions = jnp.reshape(jnp.asarray(pos, jnp.int32), (1,))
+    x = params["embed"].at[tokens].get(mode="clip").astype(cfg.dtype)
+    if cfg.window is not None:
+        slot = positions[0] % Sc          # ring buffer
+    else:
+        slot = jnp.minimum(positions[0], Sc - 1)
+    new_slot_pos = cache["slot_pos"].at[slot].set(positions[0])
+
+    quant = cfg.kv_cache_dtype == "int8"
+
+    # attention must see the *new* token's kv too -> write before attend.
+    def layer_write_first(carry, inp):
+        x, = carry
+        if quant:
+            p, kc, vc, ks, vs = inp
+        else:
+            p, kc, vc = inp
+        xn = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"], preferred_element_type=f32)
+        k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"], preferred_element_type=f32)
+        v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"], preferred_element_type=f32)
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(f32)
+            k = k + p["bk"].astype(f32)
+            v = v + p["bv"].astype(f32)
+        q, k, v = (t.astype(x.dtype) for t in (q, k, v))
+        q = L.apply_rope(q, positions, fraction=cfg.rope_fraction,
+                         theta=cfg.rope_theta)
+        k = L.apply_rope(k, positions, fraction=cfg.rope_fraction,
+                         theta=cfg.rope_theta)
+        if quant:
+            kq, ksc = _quantize_kv(k)
+            vq, vsc = _quantize_kv(v)
+            kc = lax.dynamic_update_slice_in_dim(kc, kq, slot, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(vc, vq, slot, axis=1)
+            ks = lax.dynamic_update_slice_in_dim(ks, ksc, slot, axis=1)
+            vs = lax.dynamic_update_slice_in_dim(vs, vsc, slot, axis=1)
+            k_full = _dequantize_kv(kc, ks)
+            v_full = _dequantize_kv(vc, vs)
+        else:
+            kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                 slot, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                 slot, axis=1)
+            k_full, v_full = kc, vc
+        o = L.decode_attention(q, k_full, v_full,
+                               cache_positions=new_slot_pos,
+                               pos=positions[0], window=cfg.window)
+        h = jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                       preferred_element_type=f32).astype(x.dtype)
+        x = x + h
+        h, _ = _ffn(cfg, p, L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        x = x + h
+        return (x,), ((kc, vc, ks, vs) if quant else (kc, vc))
+
+    if quant:
+        (x,), (k_all, v_all, ks_all, vs_all) = lax.scan(
+            layer_write_first, (x,),
+            (params["blocks"], cache["k"], cache["v"], cache["k_scale"],
+             cache["v_scale"]), unroll=L.scan_unroll(cfg.n_layers))
+    else:
+        (x,), (k_all, v_all) = lax.scan(
+            layer_write_first, (x,),
+            (params["blocks"], cache["k"], cache["v"]),
+            unroll=L.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                        preferred_element_type=f32)
+    new_cache = {"k": k_all, "v": v_all, "slot_pos": new_slot_pos}
+    if quant:
+        new_cache["k_scale"] = ks_all
+        new_cache["v_scale"] = vs_all
+    return logits, new_cache
+
+
+def prefill_step(params, cfg: LMConfig, tokens):
+    """Inference prefill: returns (last-position logits, stacked kv cache)."""
+    logits, _, cache = forward(params, cfg, tokens, collect_cache=True)
+    return logits[:, -1:], cache

@@ -1,0 +1,152 @@
+"""ViT-B/16 style vision transformer (encoder-only classifier)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import spec
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    dtype: str = "bfloat16"
+    remat: bool = True
+    max_res: int = 384        # pos-emb table sized for the largest shape
+
+    @property
+    def n_patches_max(self) -> int:
+        return (self.max_res // self.patch) ** 2
+
+    def param_count(self) -> int:
+        from repro.models.params import param_count
+        return param_count(param_specs(self))
+
+
+def param_specs(cfg: ViTConfig):
+    Ln, d, H, ff = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.d_ff
+    Dh = d // H
+    dt = jnp.dtype(cfg.dtype)
+    blk = {
+        "ln1_w": spec((Ln, d), (None, None), dtype=dt, init="ones"),
+        "ln1_b": spec((Ln, d), (None, None), dtype=dt, init="zeros"),
+        "ln2_w": spec((Ln, d), (None, None), dtype=dt, init="ones"),
+        "ln2_b": spec((Ln, d), (None, None), dtype=dt, init="zeros"),
+        "wq": spec((Ln, d, H, Dh), (None, "fsdp", "tensor", None), dtype=dt, init="fan_in"),
+        "wk": spec((Ln, d, H, Dh), (None, "fsdp", "tensor", None), dtype=dt, init="fan_in"),
+        "wv": spec((Ln, d, H, Dh), (None, "fsdp", "tensor", None), dtype=dt, init="fan_in"),
+        "bq": spec((Ln, H, Dh), (None, "tensor", None), dtype=dt, init="zeros"),
+        "bk": spec((Ln, H, Dh), (None, "tensor", None), dtype=dt, init="zeros"),
+        "bv": spec((Ln, H, Dh), (None, "tensor", None), dtype=dt, init="zeros"),
+        "wo": spec((Ln, H, Dh, d), (None, "tensor", None, "fsdp"), dtype=dt, init="fan_in"),
+        "bo": spec((Ln, d), (None, None), dtype=dt, init="zeros"),
+        "w1": spec((Ln, d, ff), (None, "fsdp", "tensor"), dtype=dt, init="fan_in"),
+        "b1": spec((Ln, ff), (None, "tensor"), dtype=dt, init="zeros"),
+        "w2": spec((Ln, ff, d), (None, "tensor", "fsdp"), dtype=dt, init="fan_in"),
+        "b2": spec((Ln, d), (None, None), dtype=dt, init="zeros"),
+    }
+    return {
+        "patch_embed": spec((cfg.patch, cfg.patch, 3, d),
+                            (None, None, None, "tensor"), dtype=dt, init="fan_in"),
+        "patch_bias": spec((d,), ("tensor",), dtype=dt, init="zeros"),
+        "cls_token": spec((1, 1, d), (None, None, None), dtype=dt),
+        "pos_embed": spec((cfg.n_patches_max + 1, d), (None, None), dtype=dt),
+        "blocks": blk,
+        "ln_f_w": spec((d,), (None,), dtype=dt, init="ones"),
+        "ln_f_b": spec((d,), (None,), dtype=dt, init="zeros"),
+        "head_w": spec((d, cfg.n_classes), ("fsdp", "tensor"), dtype=dt, init="fan_in"),
+        "head_b": spec((cfg.n_classes,), ("tensor",), dtype=dt, init="zeros"),
+    }
+
+
+def _block(cfg, p, x):
+    B, S, d = x.shape
+    H, Dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    h = L.layer_norm(x, p["ln1_w"], p["ln1_b"])
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"], preferred_element_type=f32) + p["bq"].astype(f32)
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"], preferred_element_type=f32) + p["bk"].astype(f32)
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"], preferred_element_type=f32) + p["bv"].astype(f32)
+    q, k, v = (L.constrain(t.astype(x.dtype), "batch", None, "tensor", None)
+               for t in (q, k, v))
+    o = L.chunked_attention(q, k, v, causal=False,
+                            chunk=min(1024, S))
+    h = jnp.einsum("bshk,hkd->bsd", o, p["wo"])     # bf16 wire for TP psum
+    x = L.constrain(x + (h.astype(f32) + p["bo"].astype(f32)).astype(x.dtype),
+                    "batch", None, None)
+    h = L.layer_norm(x, p["ln2_w"], p["ln2_b"])
+    x = L.constrain(x + L.gelu_mlp(h, p["w1"], p["b1"], p["w2"], p["b2"]),
+                    "batch", None, None)
+    return x
+
+
+def forward(params, cfg: ViTConfig, images):
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    B, Hh, Ww, _ = images.shape
+    d = cfg.d_model
+    x = lax.conv_general_dilated(
+        images.astype(cfg.dtype), params["patch_embed"].astype(cfg.dtype),
+        window_strides=(cfg.patch, cfg.patch), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = (x.astype(f32) + params["patch_bias"].astype(f32)).astype(cfg.dtype)
+    S = x.shape[1] * x.shape[2]
+    x = x.reshape(B, S, d)
+    cls = jnp.broadcast_to(params["cls_token"].astype(cfg.dtype), (B, 1, d))
+    x = jnp.concatenate([cls, x], axis=1)
+    pos = params["pos_embed"][: S + 1].astype(cfg.dtype)
+    x = x + pos[None]
+
+    def body(x, p):
+        return _block(cfg, p, x), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(fn, x, params["blocks"],
+                    unroll=L.scan_unroll(cfg.n_layers))
+    x = L.layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+    cls_tok = x[:, 0]
+    logits = jnp.einsum("bd,dc->bc", cls_tok, params["head_w"],
+                        preferred_element_type=f32) + params["head_b"].astype(f32)
+    return logits
+
+
+def features(params, cfg: ViTConfig, images):
+    """Patch-token feature map (B, H/p, W/p, d) for detection heads."""
+    B, Hh, Ww, _ = images.shape
+    d = cfg.d_model
+    x = lax.conv_general_dilated(
+        images.astype(cfg.dtype), params["patch_embed"].astype(cfg.dtype),
+        window_strides=(cfg.patch, cfg.patch), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ).astype(cfg.dtype)
+    hp, wp = x.shape[1], x.shape[2]
+    S = hp * wp
+    x = x.reshape(B, S, d)
+    cls = jnp.broadcast_to(params["cls_token"].astype(cfg.dtype), (B, 1, d))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"][: S + 1].astype(cfg.dtype)[None]
+
+    def body(x, p):
+        return _block(cfg, p, x), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(fn, x, params["blocks"],
+                    unroll=L.scan_unroll(cfg.n_layers))
+    x = L.layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+    return x[:, 1:].reshape(B, hp, wp, d)
+
+
+def loss_fn(params, cfg: ViTConfig, batch):
+    logits = forward(params, cfg, batch["images"])
+    from repro.models.transformer_lm import softmax_xent
+    return softmax_xent(logits, batch["labels"])

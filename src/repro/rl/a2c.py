@@ -1,0 +1,109 @@
+"""Low-level actor-critic agent (paper §V-A, §VI-B).
+
+Per-camera agent choosing the two classification thresholds (tr1, tr2) per
+chunk.  Hyper-parameters from the paper: Adam lr 0.005 (actor) / 0.01
+(critic), discount γ = 0.9, reward r = α1·acc − α2·latency-penalty with
+α1 = α2 = 0.5, τ = 1 s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import init_params
+from repro.rl import networks as N
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class A2CConfig:
+    state_dim: int
+    action_dim: int = 2
+    lr_actor: float = 0.005
+    lr_critic: float = 0.01
+    gamma: float = 0.9
+    alpha1: float = 0.5   # reward accuracy weight
+    alpha2: float = 0.5   # reward latency-penalty weight
+    tau_latency: float = 1.0
+    entropy_coef: float = 1e-3
+
+
+def reward(cfg: A2CConfig, mean_acc, latency):
+    """Eq. 4: α1·acc − α2·P(latency>τ)."""
+    penalty = (latency > cfg.tau_latency).astype(f32)
+    return cfg.alpha1 * mean_acc - cfg.alpha2 * penalty
+
+
+def init(key, cfg: A2CConfig):
+    ka, kc = jax.random.split(key)
+    actor = init_params(ka, N.low_actor_specs(cfg.state_dim, cfg.action_dim))
+    critic = init_params(kc, N.low_critic_specs(cfg.state_dim))
+    return {
+        "actor": actor, "critic": critic,
+        "opt_a": init_state(actor), "opt_c": init_state(critic),
+    }
+
+
+def act(key, agent, state, explore: bool = True):
+    mu, log_std = N.low_actor_apply(agent["actor"], state)
+    if explore:
+        a, _ = N.sample_squashed(key, mu, log_std)
+    else:
+        a = N.deterministic_action(mu)
+    return a  # (action_dim,) in (0,1): [tr1, tr2]
+
+
+@partial(jax.jit, static_argnums=(2,))
+def update(agent, batch, cfg: A2CConfig):
+    """On-policy update over a batch of transitions.
+
+    batch: states (B, S), actions (B, A), rewards (B,), next_states (B, S),
+    dones (B,).
+    """
+    s, a, r, s2, done = (batch["states"], batch["actions"],
+                         batch["rewards"], batch["next_states"],
+                         batch["dones"])
+    v2 = N.low_critic_apply(agent["critic"], s2)
+    target = r + cfg.gamma * v2 * (1.0 - done)
+    target = jax.lax.stop_gradient(target)
+
+    def critic_loss(cp):
+        v = N.low_critic_apply(cp, s)
+        return jnp.mean(jnp.square(v - target))
+
+    cl, gc = jax.value_and_grad(critic_loss)(agent["critic"])
+    adv = target - N.low_critic_apply(agent["critic"], s)
+    # normalized advantages + clipped log-probs: the tanh-squash jacobian
+    # explodes near the action bounds and destabilizes vanilla A2C
+    adv = (adv - adv.mean()) / (adv.std() + 1e-6)
+    adv = jax.lax.stop_gradient(adv)
+
+    def actor_loss(ap):
+        mu, log_std = N.low_actor_apply(ap, s)
+        std = jnp.exp(log_std)
+        # REINFORCE on the *pre-squash* Gaussian: the policy is a
+        # distribution over pre-activations, the reward composes with the
+        # squash — an unbiased estimator with no tanh-density saturation
+        # attractor (the a-space jacobian term rewards extreme actions).
+        pre = jnp.arctanh(jnp.clip(2 * a - 1, -0.995, 0.995))
+        logp = (-0.5 * jnp.square(jnp.clip((pre - mu) / std, -6, 6))
+                - log_std - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
+        ent = log_std.sum(-1).mean()
+        return -(logp * adv).mean() - cfg.entropy_coef * ent
+
+    al, ga = jax.value_and_grad(actor_loss)(agent["actor"])
+    oa = AdamWConfig(lr=cfg.lr_actor, weight_decay=0.0, warmup_steps=0,
+                     clip_norm=5.0)
+    oc = AdamWConfig(lr=cfg.lr_critic, weight_decay=0.0, warmup_steps=0,
+                     clip_norm=5.0)
+    new_actor, opt_a, _ = apply_updates(agent["actor"], ga, agent["opt_a"], oa)
+    new_critic, opt_c, _ = apply_updates(agent["critic"], gc, agent["opt_c"], oc)
+    return ({"actor": new_actor, "critic": new_critic,
+             "opt_a": opt_a, "opt_c": opt_c},
+            {"actor_loss": al, "critic_loss": cl,
+             "mean_adv": adv.mean()})

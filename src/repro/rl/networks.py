@@ -1,0 +1,99 @@
+"""DRL networks sized exactly per paper §VI-B.
+
+Low level (per camera, actor-critic): policy + value both 2-layer MLPs with
+128 units, ReLU.  High level (bandwidth controller, SAC): policy 4-layer
+MLP 256 units; value/Q 3-layer MLPs 256 units, ReLU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import spec, init_params
+
+f32 = jnp.float32
+
+
+def mlp_specs(sizes, name="mlp"):
+    p = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        p[f"w{i}"] = spec((a, b), (None, None), dtype=f32, init="fan_in")
+        p[f"b{i}"] = spec((b,), (None,), dtype=f32, init="zeros")
+    return p
+
+
+def mlp_apply(params, x, n_layers: int, final_activation=None):
+    for i in range(n_layers):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            x = jax.nn.relu(x)
+    if final_activation is not None:
+        x = final_activation(x)
+    return x
+
+
+# ---------------- low level (paper: 2x128) ----------------
+def low_actor_specs(state_dim: int, action_dim: int = 2):
+    # outputs mean and log_std per action dim
+    return mlp_specs((state_dim, 128, 128, 2 * action_dim))
+
+
+def low_critic_specs(state_dim: int):
+    return mlp_specs((state_dim, 128, 128, 1))
+
+
+def low_actor_apply(params, state):
+    out = mlp_apply(params, state, 3)
+    mu, log_std = jnp.split(out, 2, axis=-1)
+    # bounded mean keeps the squashed policy off the tanh saturation
+    # attractor (the density jacobian rewards extreme actions otherwise)
+    return jnp.clip(mu, -3.0, 3.0), jnp.clip(log_std, -4.0, 1.0)
+
+
+def low_critic_apply(params, state):
+    return mlp_apply(params, state, 3)[..., 0]
+
+
+# ---------------- high level (paper: SAC, 4x256 policy / 3x256 value) -----
+def high_actor_specs(state_dim: int, action_dim: int):
+    return mlp_specs((state_dim, 256, 256, 256, 256, 2 * action_dim))
+
+
+def high_value_specs(state_dim: int):
+    return mlp_specs((state_dim, 256, 256, 256, 1))
+
+
+def high_q_specs(state_dim: int, action_dim: int):
+    return mlp_specs((state_dim + action_dim, 256, 256, 256, 1))
+
+
+def high_actor_apply(params, state):
+    out = mlp_apply(params, state, 5)
+    mu, log_std = jnp.split(out, 2, axis=-1)
+    return mu, jnp.clip(log_std, -5.0, 2.0)
+
+
+def high_value_apply(params, state):
+    return mlp_apply(params, state, 4)[..., 0]
+
+
+def high_q_apply(params, state, action):
+    return mlp_apply(params, jnp.concatenate([state, action], -1), 4)[..., 0]
+
+
+# ---------------- squashed-Gaussian helpers ----------------
+def sample_squashed(key, mu, log_std):
+    """tanh-squashed Gaussian -> action in (0,1), with log-prob."""
+    std = jnp.exp(log_std)
+    eps = jax.random.normal(key, mu.shape, f32)
+    pre = mu + std * eps
+    tanh = jnp.tanh(pre)
+    a = 0.5 * (tanh + 1.0)
+    logp = (-0.5 * (eps ** 2) - log_std - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
+    # tanh + affine change of variables
+    logp -= jnp.sum(jnp.log(0.5 * (1 - tanh ** 2) + 1e-6), axis=-1)
+    return a, logp
+
+
+def deterministic_action(mu):
+    return 0.5 * (jnp.tanh(mu) + 1.0)

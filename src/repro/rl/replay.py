@@ -1,0 +1,35 @@
+"""Fixed-size replay buffer (paper: size 1e4, minibatch 128)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, state_dim: int, action_dim: int,
+                 seed: int = 0):
+        self.capacity = capacity
+        self.s = np.zeros((capacity, state_dim), np.float32)
+        self.a = np.zeros((capacity, action_dim), np.float32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s2 = np.zeros((capacity, state_dim), np.float32)
+        self.d = np.zeros((capacity,), np.float32)
+        self.ptr = 0
+        self.full = False
+        self.rng = np.random.default_rng(seed)
+
+    def __len__(self):
+        return self.capacity if self.full else self.ptr
+
+    def add(self, s, a, r, s2, done):
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i] = s, a, r
+        self.s2[i], self.d[i] = s2, float(done)
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.full = self.full or self.ptr == 0
+
+    def sample(self, batch: int):
+        n = len(self)
+        idx = self.rng.integers(0, n, size=batch)
+        return {"states": self.s[idx], "actions": self.a[idx],
+                "rewards": self.r[idx], "next_states": self.s2[idx],
+                "dones": self.d[idx]}

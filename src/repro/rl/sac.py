@@ -1,0 +1,118 @@
+"""High-level Soft Actor-Critic bandwidth controller (paper §V-B, §VI-B).
+
+Hyper-parameters from the paper: policy lr 0.001, value lr 0.003, Q lr
+0.0003; target update tau 0.02; γ 0.9; replay 1e4; minibatch 128.  Policy
+4×256 MLP, value/Q 3×256 MLPs.  The action is the per-stream bandwidth
+proportion vector (softmax-normalized downstream).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import init_params
+from repro.rl import networks as N
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SACConfig:
+    state_dim: int
+    action_dim: int
+    lr_policy: float = 0.001
+    lr_value: float = 0.003
+    lr_q: float = 0.0003
+    tau: float = 0.02
+    gamma: float = 0.9
+    alpha: float = 0.05          # entropy temperature
+    buffer_size: int = 10_000
+    minibatch: int = 128
+
+
+def init(key, cfg: SACConfig):
+    ks = jax.random.split(key, 4)
+    actor = init_params(ks[0], N.high_actor_specs(cfg.state_dim,
+                                                  cfg.action_dim))
+    value = init_params(ks[1], N.high_value_specs(cfg.state_dim))
+    q1 = init_params(ks[2], N.high_q_specs(cfg.state_dim, cfg.action_dim))
+    q2 = init_params(ks[3], N.high_q_specs(cfg.state_dim, cfg.action_dim))
+    return {
+        "actor": actor, "value": value, "value_target": value,
+        "q1": q1, "q2": q2,
+        "opt_actor": init_state(actor), "opt_value": init_state(value),
+        "opt_q1": init_state(q1), "opt_q2": init_state(q2),
+    }
+
+
+def act(key, agent, state, explore: bool = True):
+    mu, log_std = N.high_actor_apply(agent["actor"], state)
+    if explore:
+        a, _ = N.sample_squashed(key, mu, log_std)
+    else:
+        a = N.deterministic_action(mu)
+    return a     # (C,) in (0,1); normalized to proportions by the caller
+
+
+@partial(jax.jit, static_argnums=(3,))
+def update(key, agent, batch, cfg: SACConfig):
+    s, a, r, s2, done = (batch["states"], batch["actions"],
+                         batch["rewards"], batch["next_states"],
+                         batch["dones"])
+    k1, k2 = jax.random.split(key)
+
+    # --- Q update: target r + γ V_target(s') --------------------------------
+    vt = N.high_value_apply(agent["value_target"], s2)
+    q_target = jax.lax.stop_gradient(r + cfg.gamma * vt * (1 - done))
+
+    def q_loss(qp):
+        q = N.high_q_apply(qp, s, a)
+        return jnp.mean(jnp.square(q - q_target))
+
+    ql1, gq1 = jax.value_and_grad(q_loss)(agent["q1"])
+    ql2, gq2 = jax.value_and_grad(q_loss)(agent["q2"])
+
+    # --- value update: target E[minQ(s, a~π) − α logπ] ----------------------
+    mu, log_std = N.high_actor_apply(agent["actor"], s)
+    a_new, logp = N.sample_squashed(k1, mu, log_std)
+    qmin = jnp.minimum(N.high_q_apply(agent["q1"], s, a_new),
+                       N.high_q_apply(agent["q2"], s, a_new))
+    v_target = jax.lax.stop_gradient(qmin - cfg.alpha * logp)
+
+    def v_loss(vp):
+        v = N.high_value_apply(vp, s)
+        return jnp.mean(jnp.square(v - v_target))
+
+    vl, gv = jax.value_and_grad(v_loss)(agent["value"])
+
+    # --- policy update ------------------------------------------------------
+    def pi_loss(ap):
+        mu, log_std = N.high_actor_apply(ap, s)
+        a_s, logp_s = N.sample_squashed(k2, mu, log_std)
+        q = jnp.minimum(N.high_q_apply(agent["q1"], s, a_s),
+                        N.high_q_apply(agent["q2"], s, a_s))
+        return jnp.mean(cfg.alpha * logp_s - q)
+
+    pl, gp = jax.value_and_grad(pi_loss)(agent["actor"])
+
+    oq = AdamWConfig(lr=cfg.lr_q, weight_decay=0.0, warmup_steps=0,
+                     clip_norm=5.0)
+    ov = AdamWConfig(lr=cfg.lr_value, weight_decay=0.0, warmup_steps=0,
+                     clip_norm=5.0)
+    op = AdamWConfig(lr=cfg.lr_policy, weight_decay=0.0, warmup_steps=0,
+                     clip_norm=5.0)
+    q1, oq1, _ = apply_updates(agent["q1"], gq1, agent["opt_q1"], oq)
+    q2, oq2, _ = apply_updates(agent["q2"], gq2, agent["opt_q2"], oq)
+    value, ov_, _ = apply_updates(agent["value"], gv, agent["opt_value"], ov)
+    actor, oa_, _ = apply_updates(agent["actor"], gp, agent["opt_actor"], op)
+    target = jax.tree.map(lambda t, o: (1 - cfg.tau) * t + cfg.tau * o,
+                          agent["value_target"], value)
+    new_agent = {"actor": actor, "value": value, "value_target": target,
+                 "q1": q1, "q2": q2, "opt_actor": oa_, "opt_value": ov_,
+                 "opt_q1": oq1, "opt_q2": oq2}
+    return new_agent, {"q_loss": 0.5 * (ql1 + ql2), "v_loss": vl,
+                       "pi_loss": pl}

@@ -1,0 +1,62 @@
+"""Elastic scaling of the serving plane.
+
+``ElasticPool`` tracks healthy device groups; on failure/eviction it
+rebuilds the mesh from survivors and re-shards the model (restore path in
+train/checkpoint.py does the same for training).  On CPU we exercise the
+logic with host-platform fake devices in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import make_axis_rules
+from repro.models.params import abstract_params
+
+
+@dataclasses.dataclass
+class ElasticPool:
+    n_groups: int                     # replica groups (e.g. data-axis rows)
+    healthy: np.ndarray = None
+
+    def __post_init__(self):
+        if self.healthy is None:
+            self.healthy = np.ones(self.n_groups, bool)
+
+    def fail(self, group: int):
+        self.healthy[group] = False
+
+    def recover(self, group: int):
+        self.healthy[group] = True
+
+    @property
+    def n_healthy(self) -> int:
+        return int(self.healthy.sum())
+
+    def usable_power_of_two(self) -> int:
+        """Largest power-of-two group count <= healthy (mesh axes like
+        powers of two; spares idle until enough recover)."""
+        n = self.n_healthy
+        p = 1
+        while p * 2 <= n:
+            p *= 2
+        return p
+
+
+def remesh(pool: ElasticPool, n_model: int = 1):
+    """Build the largest viable (data, model) mesh from healthy groups."""
+    n_devices = len(jax.devices())
+    n_data = min(pool.usable_power_of_two(), n_devices // n_model)
+    mesh = jax.make_mesh((n_data, n_model), ("data", "model"))
+    return mesh
+
+
+def reshard_params(params, specs_tree, mesh, multi_pod: bool = False):
+    """Re-device_put params for a new mesh (post-failure continuation)."""
+    from repro.distributed.sharding import tree_shardings
+    rules = make_axis_rules(multi_pod)
+    shardings = tree_shardings(mesh, specs_tree, rules)
+    return jax.tree.map(jax.device_put, params, shardings)

@@ -1,0 +1,87 @@
+"""Multi-stream serving scheduler — BiSwift's edge runtime control plane.
+
+Chunk-granular event loop over C streams:
+  * admission control: streams whose queue exceeds the latency budget are
+    deferred (their packets fall back to pipeline ③ reuse — cheap),
+  * pipeline queues: ①(infer) and ②(transfer+infer) feed the batched DNN
+    executor; ③ bypasses the DNN (paper Fig. 6),
+  * batching: inference requests across streams are batched to the DNN's
+    preferred batch (amortizes dispatch; the DNN itself is pjit'd),
+  * the bandwidth controller is invoked every ``controller_interval``
+    chunks with the global S_high state (paper: 10 s).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+f32 = np.float32
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    n_streams: int
+    batch_size: int = 8              # DNN executor batch
+    gpu_capacity_fps: float = 120.0
+    latency_budget: float = 1.0
+    controller_interval: int = 10
+
+
+@dataclasses.dataclass
+class InferRequest:
+    stream: int
+    chunk_t: int
+    frame_idx: int
+    pipeline: int                    # 1 or 2
+    frame: np.ndarray
+
+
+class PipelineQueues:
+    """Queues for pipelines ① and ② + shared batched execution."""
+
+    def __init__(self, cfg: ServingConfig, infer_fn: Callable):
+        self.cfg = cfg
+        self.q1: deque = deque()
+        self.q2: deque = deque()
+        self.infer_fn = infer_fn
+        self.completed: list = []
+
+    def submit(self, req: InferRequest):
+        (self.q1 if req.pipeline == 1 else self.q2).append(req)
+
+    @property
+    def depths(self) -> np.ndarray:
+        return np.asarray([len(self.q1), len(self.q2)], f32)
+
+    def drain(self, max_frames: Optional[int] = None):
+        """Execute queued requests in batches (priority: ① then ②)."""
+        done = []
+        budget = max_frames if max_frames is not None else 1 << 30
+        while budget > 0 and (self.q1 or self.q2):
+            batch = []
+            while len(batch) < min(self.cfg.batch_size, budget) and \
+                    (self.q1 or self.q2):
+                batch.append(self.q1.popleft() if self.q1
+                             else self.q2.popleft())
+            frames = np.stack([r.frame for r in batch])
+            outs = self.infer_fn(frames)
+            for r, o in zip(batch, outs):
+                done.append((r, o))
+            budget -= len(batch)
+        self.completed.extend(done)
+        return done
+
+
+class AdmissionController:
+    """Defers streams whose backlog would blow the latency budget."""
+
+    def __init__(self, cfg: ServingConfig):
+        self.cfg = cfg
+
+    def admit(self, queue_depths: np.ndarray, n_new_infer: int) -> bool:
+        backlog = float(queue_depths.sum()) + n_new_infer
+        est_delay = backlog / self.cfg.gpu_capacity_fps
+        return est_delay <= self.cfg.latency_budget

@@ -1,0 +1,94 @@
+"""Straggler mitigation for the distributed serving/training planes.
+
+At pod scale, slow replicas dominate tail latency.  Two mechanisms:
+
+  * ``HedgedExecutor`` — speculative re-issue: if a shard's result hasn't
+    arrived within quantile-based deadline t_q, the request is re-issued to
+    a backup replica; first result wins.  (Serving plane.)
+  * ``StragglerDetector`` — per-step timing stats; replicas slower than
+    median × threshold for ``patience`` consecutive steps are flagged for
+    eviction, which triggers the elastic re-mesh path in
+    train/fault_tolerance.py.  (Training plane.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HedgeConfig:
+    quantile: float = 0.95
+    min_history: int = 20
+    max_hedges: int = 1
+
+
+class HedgedExecutor:
+    def __init__(self, cfg: HedgeConfig, replicas: list[Callable]):
+        self.cfg = cfg
+        self.replicas = replicas
+        self.lat: deque = deque(maxlen=500)
+        self.hedges = 0
+        self.rr = 0
+
+    def _deadline(self) -> float:
+        if len(self.lat) < self.cfg.min_history:
+            return float("inf")
+        return float(np.quantile(np.asarray(self.lat), self.cfg.quantile))
+
+    def run(self, payload, *, simulate_latency: Callable | None = None):
+        """Synchronous simulation: replica latency comes from
+        ``simulate_latency(replica_idx)`` in tests; wall clock otherwise."""
+        primary = self.rr % len(self.replicas)
+        self.rr += 1
+        deadline = self._deadline()
+        t0 = time.perf_counter()
+        if simulate_latency is not None:
+            lat = simulate_latency(primary)
+            if lat > deadline and len(self.replicas) > 1:
+                self.hedges += 1
+                backup = (primary + 1) % len(self.replicas)
+                lat2 = simulate_latency(backup)
+                winner = backup if lat2 < lat else primary
+                self.lat.append(min(lat, lat2))
+                return self.replicas[winner](payload), winner
+            self.lat.append(lat)
+            return self.replicas[primary](payload), primary
+        out = self.replicas[primary](payload)
+        self.lat.append(time.perf_counter() - t0)
+        return out, primary
+
+
+@dataclasses.dataclass
+class DetectorConfig:
+    threshold: float = 1.5          # × median
+    patience: int = 5
+
+
+class StragglerDetector:
+    def __init__(self, cfg: DetectorConfig, n_replicas: int):
+        self.cfg = cfg
+        self.n = n_replicas
+        self.strikes = np.zeros(n_replicas, np.int64)
+        self.history = defaultdict(lambda: deque(maxlen=100))
+
+    def record(self, replica: int, step_time: float):
+        self.history[replica].append(step_time)
+
+    def flagged(self) -> list[int]:
+        medians = [np.median(self.history[i]) if self.history[i] else 0.0
+                   for i in range(self.n)]
+        global_med = np.median([m for m in medians if m > 0] or [0.0])
+        out = []
+        for i in range(self.n):
+            if medians[i] > self.cfg.threshold * max(global_med, 1e-12):
+                self.strikes[i] += 1
+            else:
+                self.strikes[i] = 0
+            if self.strikes[i] >= self.cfg.patience:
+                out.append(i)
+        return out

@@ -1,0 +1,50 @@
+"""FCC-broadband-style bandwidth traces + shared-uplink simulation.
+
+The paper drives the total available bandwidth from an FCC trace (§VI-A)
+and shapes per-camera links with WonderShaper.  Here: a stochastic trace
+generator whose marginals mimic FCC fixed-broadband uplink measurements
+(log-normal levels, AR(1) temporal correlation, occasional drops), plus a
+shared-uplink splitter applying the controller's allocation vector.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    mean_kbps: float = 16000.0   # paper evaluates 8/16 Mbps uplinks
+    std_log: float = 0.25
+    ar: float = 0.9              # AR(1) coefficient
+    drop_prob: float = 0.02      # transient dips
+    drop_factor: float = 0.3
+    floor_kbps: float = 1000.0
+    seed: int = 0
+
+
+def generate_trace(cfg: TraceConfig, n_steps: int) -> np.ndarray:
+    """Per-chunk total available bandwidth (kbps)."""
+    rng = np.random.default_rng(cfg.seed)
+    x = 0.0
+    out = np.empty(n_steps, np.float64)
+    for t in range(n_steps):
+        x = cfg.ar * x + np.sqrt(1 - cfg.ar ** 2) * rng.normal(0, cfg.std_log)
+        bw = cfg.mean_kbps * np.exp(x - cfg.std_log ** 2 / 2)
+        if rng.random() < cfg.drop_prob:
+            bw *= cfg.drop_factor
+        out[t] = max(bw, cfg.floor_kbps)
+    return out
+
+
+def allocate(total_kbps: float, proportions: np.ndarray) -> np.ndarray:
+    """Split the shared uplink by the controller's proportion vector."""
+    p = np.asarray(proportions, np.float64)
+    p = np.maximum(p, 1e-6)
+    p = p / p.sum()
+    return total_kbps * p
+
+
+def even_allocation(total_kbps: float, n_streams: int) -> np.ndarray:
+    return np.full(n_streams, total_kbps / n_streams)

@@ -1,0 +1,80 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Two composable schemes with error feedback (memory), applied to the DP
+gradient all-reduce — the dominant cross-pod collective:
+
+  * top-k sparsification (keep the largest |g| fraction, accumulate the
+    rest into the error buffer),
+  * int8 quantization (per-tensor scale, stochastic-rounding-free
+    deterministic variant; residual into the error buffer).
+
+Both preserve the descent direction in expectation; see EXPERIMENTS.md
+§Perf for the measured wire-byte reduction on the multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"        # none | topk | int8 | topk_int8
+    topk_fraction: float = 0.05
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+
+
+def _topk_mask(g, fraction: float):
+    k = max(int(g.size * fraction), 1)
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress(cfg: CompressionConfig, grads, error):
+    """Returns (compressed_grads, new_error).  Call BEFORE the DP psum."""
+    if cfg.scheme == "none":
+        return grads, error
+
+    def one(g, e):
+        g = g.astype(f32) + e
+        out = g
+        if "topk" in cfg.scheme:
+            mask = _topk_mask(g, cfg.topk_fraction)
+            out = g * mask
+        if "int8" in cfg.scheme:
+            scale = jnp.maximum(jnp.abs(out).max(), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(out / scale), -127, 127)
+            out = q * scale
+        return out, g - out
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [p[0] for p in pairs]),
+            jax.tree.unflatten(tdef, [p[1] for p in pairs]))
+
+
+def compressed_bytes(cfg: CompressionConfig, grads) -> int:
+    """Wire-byte estimate for EXPERIMENTS.md (values + indices for topk)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        if cfg.scheme == "none":
+            total += g.size * 4
+        elif cfg.scheme == "topk":
+            k = max(int(g.size * cfg.topk_fraction), 1)
+            total += k * (4 + 4)
+        elif cfg.scheme == "int8":
+            total += g.size * 1 + 4
+        elif cfg.scheme == "topk_int8":
+            k = max(int(g.size * cfg.topk_fraction), 1)
+            total += k * (1 + 4) + 4
+    return total

@@ -1,0 +1,54 @@
+"""Fault tolerance: supervised restarts + elastic re-meshing.
+
+``supervise`` wraps train.loop.run: on failure (a lost node surfaces as an
+exception in the runner) it restores the latest checkpoint and continues —
+optionally on a *smaller* mesh (elastic downscale), re-device_putting every
+leaf with the new shardings.  Checkpoints are the source of truth; at
+1000+ node scale this is the standard preempt/resume discipline, and the
+async checkpoint path bounds lost work to ``ckpt_every`` steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from repro.train import checkpoint as CKPT
+from repro.train import loop as LOOP
+
+
+@dataclasses.dataclass
+class SuperviseResult:
+    state: object
+    history: list
+    restarts: int
+
+
+def supervise(make_step_and_state: Callable, data_factory: Callable,
+              cfg: LOOP.LoopConfig, *, max_restarts: int = 3,
+              fail_injector=None, on_restart=None) -> SuperviseResult:
+    """make_step_and_state(attempt) -> (step_fn, state, state_shardings).
+
+    Re-invoked per attempt so the caller can rebuild on a smaller mesh
+    (elastic): the restore inside loop.run() re-shards the checkpoint onto
+    whatever shardings the new attempt provides.
+    """
+    restarts = 0
+    history_all = []
+    while True:
+        step_fn, state, shardings = make_step_and_state(restarts)
+        try:
+            state, hist = LOOP.run(
+                step_fn, state, data_factory(), cfg,
+                state_shardings=shardings,
+                fail_injector=fail_injector if restarts == 0 else None)
+            history_all.extend(hist)
+            return SuperviseResult(state=state, history=history_all,
+                                   restarts=restarts)
+        except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart:
+                on_restart(restarts)

@@ -1,0 +1,65 @@
+"""Generic training loop: data pipeline -> sharded step -> checkpoints.
+
+Production behaviors: periodic + final checkpointing (async), metric
+logging, preemption-safe resume (auto-restart from the latest step), and
+optional gradient compression on the DP axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as CKPT
+
+f32 = np.float32
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    log_every: int = 10
+    async_ckpt: bool = False
+    keep: int = 3
+
+
+def run(step_fn: Callable, state, data_iter: Iterator, cfg: LoopConfig,
+        *, state_shardings=None, on_metrics=None, fail_injector=None):
+    """Runs the loop; returns (final_state, history).
+
+    ``fail_injector(step) -> bool`` lets the fault-tolerance tests simulate
+    node failures mid-run; the loop raises, and the supervisor restarts
+    from the latest checkpoint (see train/fault_tolerance.py).
+    """
+    start = 0
+    if cfg.ckpt_dir:
+        last = CKPT.latest_step(cfg.ckpt_dir)
+        if last is not None:
+            state = CKPT.restore(cfg.ckpt_dir, last, state,
+                                 shardings=state_shardings)
+            start = last
+    history = []
+    t0 = time.time()
+    for step in range(start, cfg.total_steps):
+        if fail_injector is not None and fail_injector(step):
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % cfg.log_every == 0 or step + 1 == cfg.total_steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step + 1
+            m["steps_per_s"] = (step + 1 - start) / max(time.time() - t0,
+                                                        1e-9)
+            history.append(m)
+            if on_metrics:
+                on_metrics(m)
+        if cfg.ckpt_dir and ((step + 1) % cfg.ckpt_every == 0
+                             or step + 1 == cfg.total_steps):
+            CKPT.save(cfg.ckpt_dir, step + 1, state, keep=cfg.keep,
+                      blocking=not cfg.async_ckpt)
+    return state, history

@@ -1,0 +1,97 @@
+"""Sharded AdamW with global-norm clipping (pure JAX, pytree-based).
+
+Moments live in fp32 and inherit each parameter's NamedSharding (same
+logical axes), so optimizer state is ZeRO-sharded exactly like the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def init_state(params):
+    return {
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(param_sds):
+    """ShapeDtypeStructs for the optimizer state (dry-run; keeps shardings)."""
+    def f32_like(p):
+        sh = getattr(p, "sharding", None)
+        if sh is not None:
+            return jax.ShapeDtypeStruct(p.shape, f32, sharding=sh)
+        return jax.ShapeDtypeStruct(p.shape, f32)
+
+    return {
+        "mu": jax.tree.map(f32_like, param_sds),
+        "nu": jax.tree.map(f32_like, param_sds),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(f32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    sq = sum(jnp.sum(jnp.square(g.astype(f32))) for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, opt_state, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(f32)
+    b2c = 1 - cfg.b2 ** step.astype(f32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(f32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,101 @@
+"""BiSwift core invariants: Eq.3 classification, quality transfer gain,
+reuse shifting, fairness metrics, hybrid encoder budgets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.classification import classify_frames, pipeline_fractions
+from repro.core.fairness import jain_index, min_reward_fairness
+from repro.core.quality_transfer import transfer_frame, transfer_gain_psnr
+from repro.core.reuse import shift_boxes
+from repro.sim.video_source import StreamConfig, generate_chunk
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ Eq. 3
+def test_classification_extreme_thresholds():
+    fd = jnp.asarray(np.random.default_rng(0).uniform(0, 0.3, 10))
+    rm = fd * 0.5
+    # huge thresholds -> everything (but frame 0) is reuse
+    t, _, _ = classify_frames(fd, rm, 1e9, 1e9)
+    assert int(t[0]) == 1 and (np.asarray(t[1:]) == 3).all()
+    # tr1 = -inf -> everything is an anchor
+    t, _, _ = classify_frames(fd, rm, -1.0, 1e9)
+    assert (np.asarray(t) == 1).all()
+    # tr1 huge, tr2 = -1 -> type 2 everywhere after frame 0
+    t, _, _ = classify_frames(fd, rm, 1e9, -1.0)
+    assert (np.asarray(t[1:]) == 2).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(tr1=st.floats(0.0, 0.5), tr2=st.floats(0.0, 0.5))
+def test_classification_resets_accumulators(tr1, tr2):
+    """After any inferred frame (type 1/2), accumulated X restarts below
+    tr1 on the next frame unless that frame's own diff exceeds it."""
+    fd = jnp.asarray(np.random.default_rng(1).uniform(0, 0.2, 16))
+    rm = fd
+    types, X, R = classify_frames(fd, rm, tr1, tr2)
+    types, X = np.asarray(types), np.asarray(X)
+    for i in range(1, 16):
+        if types[i - 1] != 3:       # accumulator reset at i-1
+            assert X[i] == pytest.approx(float(fd[i]), abs=1e-5)
+
+
+def test_pipeline_fractions_sum_to_one():
+    fd = jnp.asarray(np.random.default_rng(2).uniform(0, 0.3, 30))
+    t, _, _ = classify_frames(fd, fd, 0.1, 0.1)
+    f = np.asarray(pipeline_fractions(t))
+    assert f.sum() == pytest.approx(1.0, abs=1e-6)
+
+
+# ------------------------------------------------------- quality transfer
+def test_transfer_beats_plain_upscale():
+    """Paper Fig. 8a: transfer from an HD anchor beats nearest upscale."""
+    from repro.codec.rate_model import downscale, upscale_nearest
+    frames, _, _ = generate_chunk(KEY, StreamConfig(height=64, width=96,
+                                                    n_objects=4), 0, 2)
+    raw = frames[1]
+    anchor = frames[0]                      # HD anchor = previous frame
+    lr_up = upscale_nearest(downscale(frames[1:2], 0.25), 64, 96)[0]
+    from repro.codec.motion import block_sad
+    mv, _ = block_sad(raw, anchor, radius=8)
+    enhanced = transfer_frame(anchor, mv, jnp.zeros_like(raw))
+    gain = transfer_gain_psnr(raw, lr_up, enhanced)
+    assert float(gain) > 3.0                # >3 dB over nearest upscale
+
+
+# ------------------------------------------------------------------ reuse
+def test_reuse_shifts_by_mean_mv():
+    """Codec MV (3, -2) => object displacement (-3, +2)."""
+    boxes = jnp.asarray([[32.0, 32.0, 16.0, 16.0]])
+    scores = jnp.asarray([0.9])
+    mv = jnp.zeros((4, 4, 2), jnp.int32).at[..., 0].set(3).at[..., 1].set(-2)
+    shifted, sc = shift_boxes(boxes, scores, mv)
+    np.testing.assert_allclose(np.asarray(shifted[0, :2]), [29.0, 34.0],
+                               atol=1e-4)
+    assert float(sc[0]) == pytest.approx(0.9)
+
+
+# --------------------------------------------------------------- fairness
+def test_fairness_metrics():
+    assert float(min_reward_fairness(jnp.asarray([0.3, 0.8]))) == \
+        pytest.approx(0.3)
+    assert float(jain_index(jnp.asarray([1.0, 1.0, 1.0]))) == \
+        pytest.approx(1.0, abs=1e-6)
+    assert float(jain_index(jnp.asarray([1.0, 0.0, 0.0]))) == \
+        pytest.approx(1 / 3, abs=1e-6)
+
+
+# --------------------------------------------------------- hybrid encoder
+def test_hybrid_encoder_respects_bandwidth_ordering():
+    frames, _, _ = generate_chunk(KEY, StreamConfig(height=64, width=96),
+                                  0, 4)
+    from repro.core.hybrid_encoder import encode_hybrid
+    lo = encode_hybrid(np.asarray(frames), 1200.0, 0.05, 0.1)
+    hi = encode_hybrid(np.asarray(frames), 20000.0, 0.05, 0.1)
+    assert hi.ladder_level >= lo.ladder_level
+    assert hi.anchor_quality >= lo.anchor_quality
+    assert (lo.types == 1).sum() >= 1       # chunk I-frame is an anchor

@@ -1,0 +1,96 @@
+"""Codec substrate: DCT round trips, rate-quality monotonicity, motion
+estimation correctness (property-based where natural)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.codec import blockdct as B
+from repro.codec.image_codec import jpeg_encode_decode, psnr
+from repro.codec.motion import MB, block_sad, warp_blocks
+from repro.codec.rate_model import (QUALITY_LADDER, downscale,
+                                    ladder_for_bandwidth, upscale_nearest)
+from repro.codec.video_codec import VideoCodecConfig, encode_chunk, \
+    chunk_psnr
+from repro.sim.video_source import StreamConfig, generate_chunk
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_dct_orthonormal_roundtrip():
+    blocks = jax.random.uniform(KEY, (16, 8, 8), jnp.float32) * 255 - 128
+    rec = B.idct2(B.dct2(blocks))
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(blocks),
+                               atol=1e-3)
+
+
+def test_blockify_roundtrip():
+    img = jax.random.uniform(KEY, (32, 48), jnp.float32)
+    back = B.unblockify(B.blockify(img), 32, 48)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(img))
+
+
+@pytest.mark.parametrize("q1,q2", [(20.0, 50.0), (50.0, 85.0)])
+def test_jpeg_quality_monotone(q1, q2):
+    img = np.asarray(generate_chunk(KEY, StreamConfig(height=64, width=96),
+                                    0, 1)[0][0])
+    r1, b1 = jpeg_encode_decode(jnp.asarray(img), q1)
+    r2, b2 = jpeg_encode_decode(jnp.asarray(img), q2)
+    assert float(b1) < float(b2)                       # more bits
+    assert float(psnr(img, r1)) < float(psnr(img, r2)) # better quality
+
+
+@settings(deadline=None, max_examples=8)
+@given(dy=st.integers(-6, 6), dx=st.integers(-6, 6))
+def test_motion_estimation_recovers_global_shift(dy, dx):
+    """A globally shifted frame must be recovered by full-search ME."""
+    frames, _, _ = generate_chunk(KEY, StreamConfig(height=64, width=96,
+                                                    n_objects=5), 0, 1)
+    ref = np.asarray(frames[0])
+    cur = np.roll(np.roll(ref, dy, axis=0), dx, axis=1)
+    mv, sad = block_sad(jnp.asarray(cur), jnp.asarray(ref), radius=8)
+    mv = np.asarray(mv)
+    # interior blocks (away from the wrap-around border) match exactly;
+    # ME returns the *gather* offset: pred(y) = ref(y + mv) -> mv = -shift
+    inner = mv[1:-1, 1:-1]
+    assert (inner[..., 0] == -dy).all()
+    assert (inner[..., 1] == -dx).all()
+
+
+def test_warp_blocks_identity():
+    frames, _, _ = generate_chunk(KEY, StreamConfig(height=48, width=64),
+                                  0, 1)
+    f = frames[0]
+    mv = jnp.zeros((3, 4, 2), jnp.int32)
+    np.testing.assert_allclose(np.asarray(warp_blocks(f, mv)),
+                               np.asarray(f), atol=1e-4)
+
+
+def test_video_codec_quality_and_bits_monotone():
+    frames, _, _ = generate_chunk(KEY, StreamConfig(height=64, width=96),
+                                  0, 3)
+    lo = encode_chunk(frames, VideoCodecConfig(quality=25.0))
+    hi = encode_chunk(frames, VideoCodecConfig(quality=75.0))
+    assert float(lo.bits.sum()) < float(hi.bits.sum())
+    assert float(chunk_psnr(frames, lo.recon).mean()) < \
+        float(chunk_psnr(frames, hi.recon).mean())
+    assert float(chunk_psnr(frames, hi.recon).min()) > 28.0
+
+
+def test_ladder_selection():
+    assert ladder_for_bandwidth(400.0) == 0
+    assert ladder_for_bandwidth(1200.0) >= 1
+    assert ladder_for_bandwidth(20000.0) == len(QUALITY_LADDER) - 1
+    # monotone in bandwidth
+    lv = [ladder_for_bandwidth(b) for b in (300, 600, 1200, 2500, 9000)]
+    assert lv == sorted(lv)
+
+
+def test_down_up_scale_shapes():
+    frames = jax.random.uniform(KEY, (2, 96, 160), jnp.float32)
+    for ql in QUALITY_LADDER:
+        small = downscale(frames, ql.scale)
+        assert small.shape[1] % 16 == 0 and small.shape[2] % 16 == 0
+        up = upscale_nearest(small, 96, 160)
+        assert up.shape == (2, 96, 160)

@@ -1,0 +1,71 @@
+"""Dry-run tooling: HLO collective parser + roofline model-FLOPs math.
+
+These run without the 512-device env (pure string / arithmetic units).
+"""
+import sys
+
+import pytest
+
+
+def _parser():
+    # import the module without triggering its XLA_FLAGS side effect twice
+    # (safe here: flags only matter before first jax init, and tests run
+    # on the 1-device platform regardless)
+    import importlib
+    import os
+    saved = os.environ.get("XLA_FLAGS")
+    mod = importlib.import_module("repro.launch.dryrun")
+    if saved is None:
+        os.environ.pop("XLA_FLAGS", None)
+    else:
+        os.environ["XLA_FLAGS"] = saved
+    return mod
+
+
+HLO = """
+ENTRY main {
+  %p0 = bf16[8,1024,512]{2,1,0} parameter(0)
+  %ag = bf16[8,1024,8192]{2,1,0} all-gather(%p0), replica_groups=[16,16]<=[256], dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = bf16[8,64]{1,0} reduce-scatter(%y), replica_groups=[2,8]<=[16], dimensions={1}
+  %cp = f32[128]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ard = f32[4]{0} all-reduce-done(%w)
+  %ars = f32[2,2]{1,0} all-reduce-start(%v), replica_groups=[1,4]<=[4]
+}
+"""
+
+
+def test_parse_collectives_ops_and_groups():
+    dr = _parser()
+    out = dr.parse_collectives(HLO, n_devices=256)
+    wire = out.pop("_total_wire_bytes")
+    assert out["all-gather"]["count"] == 1
+    # output 8*1024*8192*2 bytes; group 16 -> wire = out*(15/16)
+    ag_out = 8 * 1024 * 8192 * 2
+    assert out["all-gather"]["output_bytes"] == ag_out
+    assert out["all-gather"]["wire_bytes"] == pytest.approx(
+        ag_out * 15 / 16)
+    # all-reduce: explicit groups of 4 -> 2*out*(3/4); -start counted,
+    # -done skipped
+    assert out["all-reduce"]["count"] == 2
+    ar_out = 1024 * 1024 * 4 + 2 * 2 * 4
+    assert out["all-reduce"]["output_bytes"] == ar_out
+    # reduce-scatter group 8: wire = out*(8-1)
+    rs_out = 8 * 64 * 2
+    assert out["reduce-scatter"]["wire_bytes"] == pytest.approx(rs_out * 7)
+    assert out["collective-permute"]["wire_bytes"] == 128 * 4
+    assert wire > 0
+
+
+def test_model_flops_formulas():
+    sys.path.insert(0, "benchmarks")
+    from benchmarks.roofline import model_flops_global
+    # llama train: 6 * N * tokens
+    mf = model_flops_global("llama3_2_1b", "train_4k")
+    from repro.configs import get_arch
+    n = get_arch("llama3_2_1b").cfg.param_count()
+    assert mf == pytest.approx(6.0 * n * 256 * 4096, rel=1e-6)
+    # decode: 2 * N_active * batch
+    mfd = model_flops_global("mixtral_8x22b", "decode_32k")
+    na = get_arch("mixtral_8x22b").cfg.active_param_count()
+    assert mfd == pytest.approx(2.0 * na * 128, rel=1e-6)

@@ -1,0 +1,87 @@
+"""Distribution layer: logical->mesh rules, divisibility demotion,
+param-spec consistency across the whole zoo (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.distributed.sharding import (MULTI_POD_RULES, SINGLE_POD_RULES,
+                                        logical_to_spec, validated_spec)
+from repro.launch.steps import _specs_tree
+from repro.models.params import ParamSpec, is_spec, param_count
+
+
+def test_rule_tables():
+    assert SINGLE_POD_RULES.mesh_axes("batch") == ("data",)
+    assert MULTI_POD_RULES.mesh_axes("batch") == ("pod", "data")
+    assert SINGLE_POD_RULES.mesh_axes(None) == ()
+    assert SINGLE_POD_RULES.mesh_axes("unknown_axis") == ()
+
+
+def test_logical_to_spec_strips_trailing_nones():
+    spec = logical_to_spec(("batch", None, None), SINGLE_POD_RULES)
+    assert spec == P("data")
+    spec = logical_to_spec(("batch", None, "tensor"), MULTI_POD_RULES)
+    assert spec == P(("pod", "data"), None, "model")
+
+
+def test_validated_spec_demotes_indivisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # 7 not divisible by any >1 axis -> replicated, but 1-sized axes pass
+    spec = validated_spec(P("data", "model"), (7, 8), mesh)
+    assert spec == P("data", "model")       # both axes are size 1 here
+
+
+@settings(deadline=None, max_examples=30)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4))
+def test_param_spec_shape_axes_equal_rank(dims):
+    s = ParamSpec(tuple(dims), tuple([None] * len(dims)))
+    assert len(s.shape) == len(s.axes)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_zoo_param_specs_well_formed(arch_id):
+    """Every ParamSpec in every (full-size) arch has rank-matched axes and
+    only known logical names."""
+    arch = get_arch(arch_id)
+    known = {None, "batch", "fsdp", "tensor", "seq_kv", "expert"}
+    tree = _specs_tree(arch)
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    assert len(leaves) > 0
+    for s in leaves:
+        assert isinstance(s, ParamSpec)
+        assert len(s.shape) == len(s.axes)
+        assert set(s.axes) <= known
+
+
+def test_published_param_counts():
+    """Sanity-check the zoo against published parameter counts."""
+    expect = {
+        "llama3_2_1b": (1.2e9, 1.4e9),
+        "chatglm3_6b": (5.5e9, 7.0e9),
+        "qwen2_moe_a2_7b": (13.0e9, 15.5e9),   # total (incl. all experts)
+        "mixtral_8x22b": (135e9, 145e9),
+        "dit_xl2": (0.6e9, 0.72e9),
+        "dit_b2": (0.12e9, 0.16e9),
+        "resnet_50": (2.2e7, 2.9e7),
+        "resnet_152": (5.5e7, 6.8e7),
+        "convnext_b": (0.8e8, 1.0e8),
+        "vit_b16": (0.8e8, 1.0e8),
+    }
+    for arch_id, (lo, hi) in expect.items():
+        arch = get_arch(arch_id)
+        tree = _specs_tree(arch)
+        if arch_id.startswith("resnet"):
+            n = param_count(tree["params"])
+        else:
+            n = param_count(tree)
+        assert lo <= n <= hi, f"{arch_id}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_mixtral_active_params():
+    cfg = get_arch("mixtral_8x22b").cfg
+    active = cfg.active_param_count()
+    assert 36e9 <= active <= 42e9             # ~39B active (top-2 of 8)

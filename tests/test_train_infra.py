@@ -1,0 +1,140 @@
+"""Training substrate: optimizer convergence, checkpoint round trips +
+resume, fault-tolerant supervision, gradient compression invariants."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as CKPT
+from repro.train import compression as COMP
+from repro.train import fault_tolerance as FT
+from repro.train import loop as LOOP
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = init_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - 1.0))
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, m = apply_updates(params, g, opt, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0],
+                               atol=0.1)
+    assert float(m["grad_norm"]) < 1.0
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros(4)}
+    opt = init_state(params)
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, m = apply_updates(params, g, opt, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0, rel=1e-3)
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.asarray([1, 2], jnp.int32)},
+            "scalar": jnp.asarray(3.5)}
+    path = CKPT.save(str(tmp_path), 7, tree)
+    assert os.path.isdir(path)
+    back = CKPT.restore(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4, 5):
+        CKPT.save(str(tmp_path), s, tree, keep=2)
+    assert CKPT.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_loop_resumes_from_checkpoint(tmp_path):
+    def step(state, batch):
+        return {"n": state["n"] + 1}, {"loss": 1.0 / (state["n"] + 1)}
+
+    def gen():
+        while True:
+            yield None
+
+    cfg = LOOP.LoopConfig(total_steps=6, ckpt_dir=str(tmp_path),
+                          ckpt_every=2, log_every=1)
+    state, _ = LOOP.run(step, {"n": jnp.asarray(0)}, gen(), cfg)
+    assert int(state["n"]) == 6
+    # resume: loop must start from step 6 (latest ckpt), not 0
+    cfg2 = LOOP.LoopConfig(total_steps=8, ckpt_dir=str(tmp_path),
+                           ckpt_every=2, log_every=1)
+    state2, hist = LOOP.run(step, {"n": jnp.asarray(0)}, gen(), cfg2)
+    assert int(state2["n"]) == 8
+    assert hist[0]["step"] == 7
+
+
+# ----------------------------------------------------------- fault tolerance
+def test_supervised_restart_completes(tmp_path):
+    calls = {"fails": 0}
+
+    def make(attempt):
+        def step(state, batch):
+            return {"n": state["n"] + 1}, {"loss": 0.0}
+        return step, {"n": jnp.asarray(0)}, None
+
+    def data():
+        while True:
+            yield None
+
+    def injector(step):
+        if step == 3 and calls["fails"] == 0:
+            calls["fails"] += 1
+            return True
+        return False
+
+    cfg = LOOP.LoopConfig(total_steps=6, ckpt_dir=str(tmp_path),
+                          ckpt_every=1, log_every=1)
+    res = FT.supervise(make, data, cfg, fail_injector=injector)
+    assert res.restarts == 1
+    assert int(res.state["n"]) == 6         # lost work bounded by ckpt_every
+
+
+# -------------------------------------------------------------- compression
+@pytest.mark.parametrize("scheme", ["topk", "int8", "topk_int8"])
+def test_compression_error_feedback_conserves_signal(scheme):
+    cfg = COMP.CompressionConfig(scheme=scheme, topk_fraction=0.25)
+    grads = {"w": jax.random.normal(KEY, (64,), jnp.float32)}
+    err = COMP.init_error(grads)
+    out, new_err = COMP.compress(cfg, grads, err)
+    # compressed + error == original (+ old error)
+    np.testing.assert_allclose(
+        np.asarray(out["w"] + new_err["w"]),
+        np.asarray(grads["w"]), atol=1e-5)
+    assert COMP.compressed_bytes(cfg, grads) < \
+        COMP.compressed_bytes(COMP.CompressionConfig("none"), grads)
+
+
+def test_compression_error_decays_over_steps():
+    """With error feedback, every component is eventually transmitted and
+    nothing is lost: sent + residual error == steps * g exactly."""
+    cfg = COMP.CompressionConfig(scheme="topk", topk_fraction=0.25)
+    g = {"w": jnp.asarray([1.0, 0.5, 0.25, 0.1])}
+    err = COMP.init_error(g)
+    sent_total = jnp.zeros(4)
+    steps = 16
+    for _ in range(steps):
+        out, err = COMP.compress(cfg, g, err)
+        sent_total = sent_total + out["w"]
+    assert (np.asarray(sent_total) > 0).all()   # every coord eventually sent
+    np.testing.assert_allclose(
+        np.asarray(sent_total + err["w"]),
+        np.asarray(g["w"]) * steps, rtol=1e-5)  # conservation
