@@ -1,11 +1,15 @@
 """Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One function per paper table/figure (benchmarks/figures.py) + kernel
-micro-benchmarks + the roofline summary from the dry-run artifacts.
-Prints ``name,us_per_call,derived`` CSV rows.
+micro-benchmarks (toy and 720p-shaped) + the fused-vs-legacy chunk
+pipeline comparison + multi-stream runtime throughput + the roofline
+summary from the dry-run artifacts.  Prints ``name,us_per_call,derived``
+CSV rows and mirrors every row into ``BENCH_pipeline.json`` so the perf
+trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -13,6 +17,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+BENCH_JSON = os.environ.get("BENCH_JSON", "BENCH_pipeline.json")
 
 
 def _timeit(fn, *args, n=3, warmup=1):
@@ -44,6 +50,85 @@ def kernel_microbench():
     us = _timeit(lambda: blockdct_quantize(blocks, 50.0, interpret=True),
                  n=2)
     rows.append(("kernel_blockdct_interp", us, "256blocks"))
+    from repro.kernels.motion_sad.ops import motion_sad
+    cur = jax.random.uniform(ks[0], (64, 96), jnp.float32) * 255
+    ref = jnp.roll(cur, (2, -3), (0, 1))
+    us = _timeit(lambda: motion_sad(cur, ref, radius=8, interpret=True), n=2)
+    rows.append(("kernel_motion_sad_interp", us, "64x96r8"))
+    return rows
+
+
+def realistic_shape_bench():
+    """720p-shaped kernel rows — the resolution the paper's edge actually
+    serves, so regressions on real tile counts (45×80 macroblocks) show up
+    even though CI runs interpret mode on CPU."""
+    from repro.codec.motion import block_sad
+    from repro.kernels.motion_sad.ops import motion_sad
+    from repro.kernels.qtransfer.ops import qtransfer
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    H, W = 720, 1280
+    cur = jax.random.uniform(ks[0], (H, W), jnp.float32) * 255
+    ref = jnp.roll(cur, (3, -2), (0, 1))
+    rows = []
+    scan = jax.jit(lambda c, r: block_sad(c, r, 8))
+    us = _timeit(lambda: scan(cur, ref), n=2)
+    rows.append(("motion_sad_scan_720p", us, "r8scan289cand"))
+    us = _timeit(lambda: motion_sad(cur, ref, radius=8, interpret=True), n=2)
+    rows.append(("kernel_motion_sad_interp_720p", us, "r8band"))
+    mv = jax.random.randint(ks[1], (H // 16, W // 16, 2), -8, 9, jnp.int32)
+    resid = jnp.zeros((H, W), jnp.float32)
+    us = _timeit(lambda: qtransfer(cur, mv, resid, interpret=True), n=2)
+    rows.append(("kernel_qtransfer_interp_720p", us, "45x80blocks"))
+    return rows
+
+
+def pipeline_bench():
+    """Fused single-jit chunk execution vs the legacy host-orchestrated
+    path on the SAME 4-frame 64×96 chunk, plus 1..N-stream EdgeRuntime
+    throughput (one padded detector dispatch per chunk)."""
+    from repro.core.hybrid_decoder import (decode_and_execute,
+                                           decode_execute_chunk)
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.models import detection as D
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    from repro.sim.video_source import StreamConfig, generate_chunk
+
+    frames, gtb, gtv = generate_chunk(
+        jax.random.PRNGKey(0), StreamConfig(height=64, width=96,
+                                            n_objects=3), 0, 4)
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    packet = encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+
+    us_legacy = _timeit(
+        lambda: decode_and_execute(packet, params, det_cfg, gtb, gtv,
+                                   bw_kbps=8000.0), n=5)
+    types = jnp.asarray(packet.types)
+    ahd = jnp.asarray(packet.anchor_hd)
+    gb, gv = jnp.asarray(gtb), jnp.asarray(gtv)
+    us_fused = _timeit(
+        lambda: decode_execute_chunk(packet.video, types, ahd, gb, gv,
+                                     params, det_cfg, bw_kbps=8000.0,
+                                     total_bits=packet.total_bits)["boxes"],
+        n=5)
+    rows = [
+        ("pipeline_legacy_per_frame_4f_64x96", us_legacy, "host-orchestrated"),
+        ("pipeline_fused_jit_4f_64x96", us_fused,
+         f"speedup:{us_legacy / max(us_fused, 1e-9):.1f}x"),
+    ]
+
+    for n_streams in (1, 2, 4):
+        rt = EdgeRuntime(ServingConfig(n_streams=n_streams), params, det_cfg)
+
+        def run_all():
+            for s in range(n_streams):
+                rt.process_chunk(s, 0, packet)
+
+        us = _timeit(run_all, n=3)
+        fps = n_streams * packet.types.shape[0] / (us / 1e6)
+        rows.append((f"runtime_process_chunk_{n_streams}stream", us,
+                     f"fps:{fps:.0f}"))
     return rows
 
 
@@ -53,6 +138,18 @@ def codec_bench():
     frames, _, _ = generate_chunk(jax.random.PRNGKey(0),
                                   StreamConfig(height=64, width=96), 0, 4)
     cfg = VideoCodecConfig()
+    try:
+        hash(cfg)
+    except TypeError as e:
+        # encode_chunk is jitted with the config as a static argument; an
+        # unhashable config would otherwise surface as an opaque jit
+        # TypeError deep inside tracing.
+        raise TypeError(
+            "codec_bench jits encode_chunk with static_argnums=1, which "
+            f"requires VideoCodecConfig to stay hashable; got {cfg!r}. "
+            "Keep it a frozen dataclass with hashable fields (or switch "
+            "this bench to static_argnames/jax.tree_util registration)."
+        ) from e
     fn = jax.jit(encode_chunk, static_argnums=1)
     us = _timeit(lambda: fn(frames, cfg), n=3)
     return [("codec_encode_chunk_4f_64x96", us, "mv+dct+bits")]
@@ -78,20 +175,31 @@ def main() -> None:
     all_rows = []
     t0 = time.time()
     from benchmarks.figures import ALL
-    for name, fn in ALL.items():
+    benches = list(ALL.items()) + [
+        (fn.__name__, fn)
+        for fn in (kernel_microbench, realistic_shape_bench, pipeline_bench,
+                   codec_bench, roofline_summary)]
+    for name, fn in benches:
         try:
             all_rows.extend(fn())
         except Exception as e:  # keep the harness robust
             all_rows.append((name, -1.0, f"ERROR:{type(e).__name__}:{e}"))
-    all_rows.extend(kernel_microbench())
-    all_rows.extend(codec_bench())
-    all_rows.extend(roofline_summary())
     for name, us, derived in all_rows:
         if isinstance(us, float):
             print(f"{name},{us:.1f},{derived}")
         else:
             print(f"{name},{us},{derived}")
     print(f"# total wall: {time.time() - t0:.1f}s")
+    payload = {
+        "schema": "biswift-bench-v1",
+        "backend": jax.default_backend(),
+        "wall_s": round(time.time() - t0, 2),
+        "rows": [{"name": n, "us_per_call": u, "derived": str(d)}
+                 for n, u, d in all_rows],
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {BENCH_JSON} ({len(all_rows)} rows)")
 
 
 if __name__ == "__main__":

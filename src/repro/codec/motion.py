@@ -24,11 +24,18 @@ def _offsets(radius: int):
     return jnp.stack([dy.reshape(-1), dx.reshape(-1)], axis=1)  # (K, 2)
 
 
-def block_sad(cur, ref, radius: int = 8):
+def block_sad(cur, ref, radius: int = 8, *, use_kernel: bool = False):
     """Returns (mv (nby, nbx, 2) int32, sad (nby, nbx) f32).
 
-    cur/ref: (H, W) with H, W multiples of 16.
+    cur/ref: (H, W) with H, W multiples of 16.  ``use_kernel`` routes
+    through the Pallas kernel in ``repro.kernels.motion_sad`` (interpret
+    mode on CPU), which evaluates every candidate offset against a padded
+    reference band resident in VMEM; this scan — one whole-frame shifted
+    SAD per candidate — is its oracle.
     """
+    if use_kernel:
+        from repro.kernels.motion_sad.ops import motion_sad
+        return motion_sad(cur, ref, radius=radius)
     H, W = cur.shape
     nby, nbx = H // MB, W // MB
     pad = radius
@@ -62,10 +69,8 @@ def warp_blocks(ref, mv):
     """
     H, W = ref.shape
     nby, nbx = mv.shape[:2]
-    pad = int(jnp.maximum(jnp.abs(mv).max(), 0)) if mv.size and not isinstance(
-        mv, jax.core.Tracer) else None
-    # static padding: use worst-case radius from values' dtype bound is not
-    # static under jit -> pad by a fixed maximum supported radius.
+    # static padding: the worst-case offset bound is not static under jit,
+    # so pad by the fixed maximum supported radius.
     R = 16
     refp = jnp.pad(ref.astype(f32), R, mode="edge")
 

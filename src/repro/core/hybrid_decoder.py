@@ -6,14 +6,27 @@ Pipeline ③: no decode — cached detections shifted by mean MV (reuse)
 
 Latency model (paper Fig. 13b): transmission = bits / allocated bandwidth,
 queueing from the serving queues, compute from per-pipeline costs.
+
+Two execution paths:
+
+* ``decode_and_execute`` — the legacy host-orchestrated path: per-frame
+  Python loops, eager op dispatch, ``np.asarray`` round trips.  Kept as the
+  oracle for the fused path.
+* ``decode_execute_chunk`` — ONE ``jax.jit`` end to end: vectorized
+  anchor-index computation (``lax.cummax`` instead of the Python loop),
+  fused upscale + quality transfer + detector forward + reuse + F1, and
+  the latency model as traced scalar math.  ``decode_execute_batched`` is
+  its vmap-over-streams entry point (one device dispatch for N streams).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.codec.rate_model import upscale_nearest
 from repro.core.hybrid_encoder import HybridPacket
@@ -35,6 +48,18 @@ class PipelineCosts:
     reuse: float = 0.006
     decode_hd: float = 0.004
     decode_video: float = 0.002
+
+
+def pipeline_cost(n1, n2, n3, costs: PipelineCosts = PipelineCosts()):
+    """Per-chunk edge compute time for n1/n2/n3 frames on pipelines ①/②/③.
+
+    The single source of truth for the per-pipeline cost formula — shared
+    by the legacy path, the fused traced path, and the serving runtime.
+    Works for host ints and traced scalars alike.
+    """
+    return (n1 * (costs.infer + costs.decode_hd)
+            + n2 * (costs.infer + costs.transfer + costs.decode_video)
+            + n3 * costs.reuse)
 
 
 @dataclasses.dataclass
@@ -103,9 +128,7 @@ def decode_and_execute(packet: HybridPacket, detector_params, det_cfg,
     n1 = int((packet.types == 1).sum())
     n2 = int((packet.types == 2).sum())
     n3 = int((packet.types == 3).sum())
-    t_comp = (n1 * (costs.infer + costs.decode_hd)
-              + n2 * (costs.infer + costs.transfer + costs.decode_video)
-              + n3 * costs.reuse)
+    t_comp = pipeline_cost(n1, n2, n3, costs)
     t_trans = packet.total_bits / max(bw_kbps * 1000.0, 1e-6)
     latency = t_trans + queue_delay + t_comp
     return ChunkResult(boxes=np.asarray(boxes), scores=np.asarray(scores),
@@ -113,6 +136,109 @@ def decode_and_execute(packet: HybridPacket, detector_params, det_cfg,
                        mean_f1=float(f1.mean()), latency=float(latency),
                        t_trans=float(t_trans), t_queue=float(queue_delay),
                        t_comp=float(t_comp))
+
+
+# --------------------------------------------------------------------------
+# Fused path: the whole chunk as one jitted computation
+# --------------------------------------------------------------------------
+def anchor_index(types):
+    """Vectorized nearest-preceding-anchor index: for each frame i, the
+    largest j <= i with types[j] == 1 (frame 0 if none).  Replaces the
+    legacy per-frame Python loop with a cumulative max over marked indices.
+    """
+    idx = jnp.arange(types.shape[0], dtype=jnp.int32)
+    marked = jnp.where(types == 1, idx, -1)
+    return jnp.maximum(lax.cummax(marked), 0)
+
+
+def _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
+                   detector_params, det_cfg, bw_kbps, queue_delay,
+                   total_bits, costs: PipelineCosts):
+    """Traced body shared by ``decode_execute_chunk`` (single stream) and
+    ``decode_execute_batched`` (vmap over streams).  Pure jnp: no host
+    transfers, no Python loops over frames."""
+    H, W = anchor_hd.shape[1:]
+
+    lr_up = upscale_nearest(enc.recon, H, W)
+    aidx = anchor_index(types)
+    anchor_plane = anchor_hd[aidx]
+    mvs_hd = _upscale_mvs(enc.mv, (H, W))
+
+    residual_up = jax.vmap(lambda r: upscale_nearest(r[None], H, W)[0])(
+        _residual_px(enc))
+    frames_exec = jnp.where((types == 1)[:, None, None], anchor_hd, lr_up)
+    qt = _transfer(anchor_plane, aidx, mvs_hd, residual_up, frames_exec,
+                   types)
+
+    # pipelines ① + ② fused into one detector forward over the whole chunk
+    boxes_i, scores_i = _detect(detector_params, det_cfg, qt)
+    boxes, scores = reuse_chunk(types, mvs_hd, boxes_i, scores_i)
+
+    f1 = jax.vmap(D.f1_score)(boxes, scores, gt_boxes, gt_valid)
+
+    # latency model as traced scalar math (no host round trip)
+    n1 = jnp.sum(types == 1).astype(f32)
+    n2 = jnp.sum(types == 2).astype(f32)
+    n3 = jnp.sum(types == 3).astype(f32)
+    t_comp = pipeline_cost(n1, n2, n3, costs)
+    t_trans = total_bits / jnp.maximum(bw_kbps * 1000.0, 1e-6)
+    latency = t_trans + queue_delay + t_comp
+    return {"boxes": boxes, "scores": scores, "f1": f1,
+            "mean_f1": f1.mean(), "latency": latency, "t_trans": t_trans,
+            "t_queue": queue_delay, "t_comp": t_comp}
+
+
+@partial(jax.jit, static_argnames=("det_cfg", "costs"))
+def decode_execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
+                         detector_params, det_cfg, *, bw_kbps,
+                         queue_delay=0.0, total_bits=0.0,
+                         costs: PipelineCosts = PipelineCosts()):
+    """One chunk of one stream as a SINGLE jitted computation.
+
+    enc: EncodedChunk (pytree); types: (T,) int; anchor_hd: (T, H, W);
+    gt_boxes/gt_valid: (T, N, 4)/(T, N); bw_kbps/queue_delay/total_bits:
+    traced scalars.  Returns a dict of device arrays (boxes, scores, f1,
+    mean_f1, latency, t_trans, t_queue, t_comp).
+    """
+    return _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
+                          detector_params, det_cfg, bw_kbps, queue_delay,
+                          total_bits, costs)
+
+
+@partial(jax.jit, static_argnames=("det_cfg", "costs"))
+def decode_execute_batched(enc, types, anchor_hd, gt_boxes, gt_valid,
+                           detector_params, det_cfg, *, bw_kbps,
+                           queue_delay, total_bits,
+                           costs: PipelineCosts = PipelineCosts()):
+    """vmap-over-streams fused execution: every leading axis is the stream
+    axis (S,...); detector params are shared.  One device dispatch for the
+    whole batch of chunks."""
+    fn = lambda e, ty, ah, gb, gv, bw, qd, tb: _execute_chunk(
+        e, ty, ah, gb, gv, detector_params, det_cfg, bw, qd, tb, costs)
+    return jax.vmap(fn)(enc, types, anchor_hd, gt_boxes, gt_valid,
+                        bw_kbps, queue_delay, total_bits)
+
+
+def decode_and_execute_fused(packet: HybridPacket, detector_params, det_cfg,
+                             gt_boxes, gt_valid, *, bw_kbps: float,
+                             queue_delay: float = 0.0,
+                             costs: PipelineCosts = PipelineCosts()
+                             ) -> ChunkResult:
+    """Host convenience wrapper: ``decode_execute_chunk`` with the same
+    packet-in / ChunkResult-out contract as ``decode_and_execute``."""
+    out = decode_execute_chunk(
+        packet.video, jnp.asarray(packet.types), jnp.asarray(packet.anchor_hd),
+        jnp.asarray(gt_boxes), jnp.asarray(gt_valid), detector_params,
+        det_cfg, bw_kbps=bw_kbps, queue_delay=queue_delay,
+        total_bits=packet.total_bits, costs=costs)
+    return ChunkResult(boxes=np.asarray(out["boxes"]),
+                       scores=np.asarray(out["scores"]), types=packet.types,
+                       f1=np.asarray(out["f1"]),
+                       mean_f1=float(out["mean_f1"]),
+                       latency=float(out["latency"]),
+                       t_trans=float(out["t_trans"]),
+                       t_queue=float(out["t_queue"]),
+                       t_comp=float(out["t_comp"]))
 
 
 def _residual_px(enc):

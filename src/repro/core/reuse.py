@@ -38,14 +38,22 @@ def shift_boxes(boxes, scores, mv):
     return jax.vmap(one)(boxes), scores
 
 
-def reuse_chunk(types, mvs, infer_boxes, infer_scores):
+def reuse_chunk(types, mvs, infer_boxes, infer_scores,
+                init_boxes=None, init_scores=None):
     """Propagate detections through type-3 frames of a chunk.
 
     types: (T,); mvs: (T, nby, nbx, 2) frame-to-previous MVs;
     infer_boxes/scores: (T, N, 4)/(T, N) — valid at type-1/2 frames (others
-    ignored).  Returns per-frame (boxes, scores) with reuse applied.
+    ignored).  ``init_boxes``/``init_scores`` seed the reuse carry — pass
+    the previous chunk's last detections so type-3 frames at a chunk
+    boundary keep tracking across chunks (defaults keep the historical
+    within-chunk behavior).  Returns per-frame (boxes, scores).
     """
     T = types.shape[0]
+    if init_boxes is None:
+        init_boxes = infer_boxes[0]
+    if init_scores is None:
+        init_scores = infer_scores[0]
 
     def step(carry, i):
         boxes, scores = carry
@@ -57,5 +65,5 @@ def reuse_chunk(types, mvs, infer_boxes, infer_scores):
         return (boxes, scores), (boxes, scores)
 
     (_, _), (all_boxes, all_scores) = jax.lax.scan(
-        step, (infer_boxes[0], infer_scores[0]), jnp.arange(T))
+        step, (init_boxes, init_scores), jnp.arange(T))
     return all_boxes, all_scores

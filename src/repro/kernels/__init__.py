@@ -8,6 +8,10 @@ qtransfer       — quality transfer (paper Fig. 7): MV block gather from the
                   row with the anchor staged in VMEM.
 blockdct        — 8×8 DCT + quantization (JPEG/codec core) as paired 8×8
                   matmuls over VMEM tiles (MXU-shaped by construction).
+motion_sad      — full-search ±R block-motion SAD: every candidate offset
+                  evaluated against a padded reference frame resident in
+                  VMEM, one macroblock row per grid step; bit-exact MVs
+                  vs the ``repro.codec.motion.block_sad`` scan oracle.
 
 Each kernel package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper, interpret=True on CPU), ref.py (pure-jnp oracle).

@@ -1,0 +1,26 @@
+"""Jit'd wrapper: per-frame and batched (vmap) motion-SAD search."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.motion_sad.kernel import motion_sad_rows
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("radius", "interpret"))
+def motion_sad(cur, ref, *, radius: int = 8, interpret: bool | None = None):
+    """cur/ref: (H, W) or (T, H, W) -> (mv, sad).
+
+    mv: (..., nby, nbx, 2) int32; sad: (..., nby, nbx) f32.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    fn = partial(motion_sad_rows, radius=radius, interpret=interpret)
+    if cur.ndim == 3:
+        return jax.vmap(fn)(cur, ref)
+    return fn(cur, ref)

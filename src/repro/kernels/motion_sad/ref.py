@@ -1,0 +1,11 @@
+"""Oracle for the motion-SAD kernel: the scan-based full search in
+``repro.codec.motion.block_sad`` (one whole-frame shifted SAD per candidate
+offset).  The kernel must match its MVs bit-exactly, including first-wins
+tie-breaking over the dy-major candidate order."""
+from __future__ import annotations
+
+from repro.codec.motion import block_sad
+
+
+def motion_sad_ref(cur, ref, radius: int = 8):
+    return block_sad(cur, ref, radius, use_kernel=False)

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hybrid_encoder import HybridPacket
-from repro.core.hybrid_decoder import PipelineCosts, _upscale_mvs
+from repro.core.hybrid_decoder import (PipelineCosts, _upscale_mvs,
+                                       pipeline_cost)
 from repro.codec.rate_model import upscale_nearest
 from repro.core.reuse import reuse_chunk
 from repro.models import detection as D
@@ -51,29 +52,48 @@ class EdgeRuntime:
 
     # ------------------------------------------------------------------
     def process_chunk(self, stream: int, t: int, packet: HybridPacket):
-        """Returns per-frame (boxes, scores, types) for one chunk."""
+        """Returns per-frame (boxes, scores, types) for one chunk.
+
+        All pipeline-①/② frames of the chunk go through ONE padded detector
+        invocation (``PipelineQueues.drain_fused``) instead of one dispatch
+        per frame; admission still reads the queue depths before the chunk
+        is enqueued, and pipeline ③ carries the previous chunk's last
+        detections across the chunk boundary.
+        """
         enc = packet.video
         T = packet.types.shape[0]
         H, W = packet.anchor_hd.shape[1:]
         types = packet.types.copy()
+        prev = self.streams.get(stream)
 
         n_infer = int((types != 3).sum())
         if not self.admission.admit(self.queues.depths, n_infer):
             # overload: demote transfer frames to reuse, keep chunk anchors
             types = np.where(types == 2, 3, types)
             self.deferred += 1
+            # deep overload: if even anchors-only blows the budget AND we
+            # have carried detections to reuse, the whole chunk runs on
+            # pipeline ③ (the previous chunk's boxes keep tracking via MVs)
+            if prev is not None and \
+                    not self.admission.admit(self.queues.depths,
+                                             int((types != 3).sum())):
+                types = np.full_like(types, 3)
 
-        lr_up = np.asarray(upscale_nearest(enc.recon, H, W))
         mvs_hd = np.asarray(_upscale_mvs(enc.mv, (H, W)))
 
-        # submit pipeline ①/② frames
+        # submit pipeline ①/② frames; one fused padded dispatch for all.
+        # lr_up is computed lazily: when overload demoted every type-2
+        # frame, the shed-load path skips the whole-chunk upscale entirely
+        lr_up = None
         for i in range(T):
             if types[i] == 1:
                 self.queues.submit(InferRequest(stream, t, i, 1,
                                                 packet.anchor_hd[i]))
             elif types[i] == 2:
+                if lr_up is None:
+                    lr_up = np.asarray(upscale_nearest(enc.recon, H, W))
                 self.queues.submit(InferRequest(stream, t, i, 2, lr_up[i]))
-        done = self.queues.drain()
+        done = self.queues.drain_fused()
 
         # collect per-frame detections; pipeline ③ reuse fills the gaps
         n_cells = (H // self.det_cfg.stride) * (W // self.det_cfg.stride)
@@ -83,26 +103,25 @@ class EdgeRuntime:
             if req.stream == stream and req.chunk_t == t:
                 boxes_t[req.frame_idx] = b
                 scores_t[req.frame_idx] = s
+
+        # pipeline-③ carry: seed reuse with the previous chunk's last boxes
+        init_b = jnp.asarray(prev.last_boxes) if prev is not None else None
+        init_s = jnp.asarray(prev.last_scores) if prev is not None else None
         boxes, scores = reuse_chunk(jnp.asarray(types), jnp.asarray(mvs_hd),
                                     jnp.asarray(boxes_t),
-                                    jnp.asarray(scores_t))
-        st = self.streams.setdefault(stream, StreamState(
-            last_boxes=np.asarray(boxes[-1]),
-            last_scores=np.asarray(scores[-1])))
-        st.last_boxes = np.asarray(boxes[-1])
-        st.last_scores = np.asarray(scores[-1])
+                                    jnp.asarray(scores_t),
+                                    init_boxes=init_b, init_scores=init_s)
+        self.streams[stream] = StreamState(last_boxes=np.asarray(boxes[-1]),
+                                           last_scores=np.asarray(scores[-1]))
         return np.asarray(boxes), np.asarray(scores), types
 
     # ------------------------------------------------------------------
     def compute_latency(self, types: np.ndarray, bits: float,
                         bw_kbps: float) -> dict:
-        c = self.costs
         n1 = int((types == 1).sum())
         n2 = int((types == 2).sum())
         n3 = int((types == 3).sum())
-        t_comp = (n1 * (c.infer + c.decode_hd)
-                  + n2 * (c.infer + c.transfer + c.decode_video)
-                  + n3 * c.reuse)
+        t_comp = pipeline_cost(n1, n2, n3, self.costs)
         t_queue = float(self.queues.depths.sum()) / self.cfg.gpu_capacity_fps
         t_trans = bits / max(bw_kbps * 1000.0, 1e-6)
         return {"t_trans": t_trans, "t_queue": t_queue, "t_comp": t_comp,

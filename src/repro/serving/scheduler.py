@@ -47,7 +47,6 @@ class PipelineQueues:
         self.q1: deque = deque()
         self.q2: deque = deque()
         self.infer_fn = infer_fn
-        self.completed: list = []
 
     def submit(self, req: InferRequest):
         (self.q1 if req.pipeline == 1 else self.q2).append(req)
@@ -55,6 +54,28 @@ class PipelineQueues:
     @property
     def depths(self) -> np.ndarray:
         return np.asarray([len(self.q1), len(self.q2)], f32)
+
+    def drain_fused(self, pad_multiple: Optional[int] = None):
+        """Execute ALL queued requests (① before ②) as ONE padded
+        invocation of ``infer_fn`` — one device dispatch per chunk.
+
+        The stacked batch is zero-padded up to the next multiple of
+        ``pad_multiple`` (default: the configured batch size) so the
+        detector sees a small, fixed set of shapes and its jit cache stays
+        warm across chunks with different type mixes.
+        """
+        batch = list(self.q1) + list(self.q2)
+        self.q1.clear()
+        self.q2.clear()
+        if not batch:
+            return []
+        pad = max(pad_multiple or self.cfg.batch_size, 1)
+        n = len(batch)
+        n_pad = -(-n // pad) * pad
+        frames = np.stack([r.frame for r in batch]
+                          + [np.zeros_like(batch[0].frame)] * (n_pad - n))
+        outs = self.infer_fn(frames)[:n]
+        return list(zip(batch, outs))
 
     def drain(self, max_frames: Optional[int] = None):
         """Execute queued requests in batches (priority: ① then ②)."""
@@ -71,7 +92,6 @@ class PipelineQueues:
             for r, o in zip(batch, outs):
                 done.append((r, o))
             budget -= len(batch)
-        self.completed.extend(done)
         return done
 
 

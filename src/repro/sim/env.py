@@ -262,11 +262,11 @@ class MultiStreamEnv:
 
     def _run_stream_full(self, c, frames, boxes, valid, bw_kbps, tr1, tr2):
         from repro.core.hybrid_encoder import encode_hybrid
-        from repro.core.hybrid_decoder import decode_and_execute
+        from repro.core.hybrid_decoder import decode_and_execute_fused
         det_params, det_cfg = self.detector
         packet = encode_hybrid(frames, bw_kbps, tr1, tr2, fps=self.cfg.fps)
-        res = decode_and_execute(packet, det_params, det_cfg, boxes, valid,
-                                 bw_kbps=bw_kbps)
+        res = decode_and_execute_fused(packet, det_params, det_cfg, boxes,
+                                       valid, bw_kbps=bw_kbps)
         types = packet.types
         chunk_s = self.cfg.chunk_frames / self.cfg.fps
         return {"stream": c, "accuracy": res.mean_f1,

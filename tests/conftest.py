@@ -1,6 +1,18 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real (1-device) platform; only launch/dryrun.py forces 512 fake
 devices, in its own process."""
+import sys
+
+try:                # real hypothesis wins whenever it is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    # this container cannot pip-install; property tests fall back to the
+    # deterministic shim (src/_hypothesis_shim.py, on PYTHONPATH=src)
+    import _hypothesis_shim
+
+    sys.modules["hypothesis"] = _hypothesis_shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies
+
 import jax
 import pytest
 
