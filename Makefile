@@ -1,0 +1,25 @@
+# BiSwift reproduction — common entry points.
+#
+# `test` is the tier-1 gate (real 1-device platform; multi-device coverage
+# runs in subprocesses spawned by tests/test_stream_sharding.py).
+# `test-multidevice` runs the WHOLE suite on a forced 4-device CPU
+# platform: BISWIFT_FORCED_MULTIDEVICE activates the sharded-parity tests
+# in-process instead of via the subprocess driver (which skips itself).
+
+PY ?= python
+MD_ENV = XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+         JAX_PLATFORMS=cpu BISWIFT_FORCED_MULTIDEVICE=4
+
+.PHONY: test test-multidevice bench bench-multidevice
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-multidevice:
+	$(MD_ENV) PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+bench-multidevice:
+	PYTHONPATH=src $(PY) -m benchmarks.run --multidevice

@@ -155,6 +155,39 @@ def codec_bench():
     return [("codec_encode_chunk_4f_64x96", us, "mv+dct+bits")]
 
 
+def _forced_cpu_env(n_devices: int = 4) -> dict:
+    """os.environ copy forcing an n-device CPU platform in a CHILD process
+    (append, not clobber, so caller XLA flags survive; XLA takes the last
+    occurrence on conflict).  Mirrors tests/conftest.forced_multidevice_env
+    — benchmarks must stay importable without the test tree."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_devices}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
+
+
+def stream_sharding_bench():
+    """Sharded-vs-single-device stream throughput (ROADMAP multi-host
+    sharding item).  Runs ``benchmarks.stream_shard`` in a subprocess with
+    a forced 4-device CPU platform — this process has already committed
+    jax to the real platform, and XLA only honours the device-count flag
+    before the first jax import.  On a machine with real accelerators the
+    child inherits them instead (the flag only affects the host platform).
+    """
+    import subprocess
+    env = os.environ if not (jax.default_backend() == "cpu"
+                             and len(jax.devices()) < 4) \
+        else _forced_cpu_env()
+    r = subprocess.run([sys.executable, "-m", "benchmarks.stream_shard"],
+                       capture_output=True, text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        tail = (r.stderr or r.stdout).strip().replace("\n", ";")[-160:]
+        return [("stream_sharding_bench", -1.0, f"ERROR:{tail}")]
+    return [tuple(row) for row in json.loads(r.stdout.strip().splitlines()[-1])]
+
+
 def roofline_summary():
     from benchmarks.roofline import load_cells
     rows = []
@@ -171,6 +204,16 @@ def roofline_summary():
 
 
 def main() -> None:
+    # --multidevice: re-run the whole harness on a forced 4-device CPU
+    # platform (fresh process; jax in THIS one is already committed)
+    if "--multidevice" in sys.argv \
+            and os.environ.get("BISWIFT_MULTIDEVICE_CHILD") != "1":
+        import subprocess
+        env = _forced_cpu_env()
+        env["BISWIFT_MULTIDEVICE_CHILD"] = "1"
+        sys.exit(subprocess.run(
+            [sys.executable, "-m", "benchmarks.run"], env=env).returncode)
+
     print("name,us_per_call,derived")
     all_rows = []
     t0 = time.time()
@@ -178,7 +221,7 @@ def main() -> None:
     benches = list(ALL.items()) + [
         (fn.__name__, fn)
         for fn in (kernel_microbench, realistic_shape_bench, pipeline_bench,
-                   codec_bench, roofline_summary)]
+                   codec_bench, stream_sharding_bench, roofline_summary)]
     for name, fn in benches:
         try:
             all_rows.extend(fn())

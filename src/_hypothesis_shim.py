@@ -50,8 +50,9 @@ def _lists(elements, min_size=0, max_size=10):
 
     bound = []
     if min_size <= 1 <= max_size:
-        bound.append([elements.boundary[0]])
-        bound.append([elements.boundary[1]])
+        # one singleton per distinct boundary (sampled_from may have < 2)
+        for b in elements.boundary[:2]:
+            bound.append([b])
     bound.append([elements.boundary[0]] * max_size)
     return _Strategy(bound, sample)
 

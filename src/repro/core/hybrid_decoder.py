@@ -205,18 +205,30 @@ def decode_execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
                           total_bits, costs)
 
 
+def _execute_batch(enc, types, anchor_hd, gt_boxes, gt_valid,
+                   detector_params, det_cfg, bw_kbps, queue_delay,
+                   total_bits, costs: PipelineCosts):
+    """vmap-over-streams traced body: every leading axis is the stream axis
+    (S, ...); detector params are shared.  Shared by the single-device jit
+    below and the mesh-sharded wrapper in
+    ``repro.distributed.stream_sharding.shard_streams`` (which calls it
+    inside a ``shard_map`` region with per-shard stream slices)."""
+    fn = lambda e, ty, ah, gb, gv, bw, qd, tb: _execute_chunk(
+        e, ty, ah, gb, gv, detector_params, det_cfg, bw, qd, tb, costs)
+    return jax.vmap(fn)(enc, types, anchor_hd, gt_boxes, gt_valid,
+                        bw_kbps, queue_delay, total_bits)
+
+
 @partial(jax.jit, static_argnames=("det_cfg", "costs"))
 def decode_execute_batched(enc, types, anchor_hd, gt_boxes, gt_valid,
                            detector_params, det_cfg, *, bw_kbps,
                            queue_delay, total_bits,
                            costs: PipelineCosts = PipelineCosts()):
-    """vmap-over-streams fused execution: every leading axis is the stream
-    axis (S,...); detector params are shared.  One device dispatch for the
-    whole batch of chunks."""
-    fn = lambda e, ty, ah, gb, gv, bw, qd, tb: _execute_chunk(
-        e, ty, ah, gb, gv, detector_params, det_cfg, bw, qd, tb, costs)
-    return jax.vmap(fn)(enc, types, anchor_hd, gt_boxes, gt_valid,
-                        bw_kbps, queue_delay, total_bits)
+    """vmap-over-streams fused execution — one device dispatch for the
+    whole batch of chunks.  Single-device oracle for the sharded path."""
+    return _execute_batch(enc, types, anchor_hd, gt_boxes, gt_valid,
+                          detector_params, det_cfg, bw_kbps, queue_delay,
+                          total_bits, costs)
 
 
 def decode_and_execute_fused(packet: HybridPacket, detector_params, det_cfg,

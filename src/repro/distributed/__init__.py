@@ -5,3 +5,9 @@ from repro.distributed.sharding import (  # noqa: F401
     logical_to_spec,
     make_axis_rules,
 )
+from repro.distributed.stream_sharding import (  # noqa: F401
+    pad_stream_axis,
+    shard_streams,
+    stream_shard_count,
+    stream_sharding,
+)

@@ -29,6 +29,18 @@ class ShardCtx:
     def tensor_axes(self) -> tuple[str, ...]:
         return self.rules.mesh_axes("tensor")
 
+    @property
+    def stream_axes(self) -> tuple[str, ...]:
+        """Mesh axes the serving stream dim shards over (axes named by the
+        rule table but absent from this mesh are dropped)."""
+        from repro.distributed.stream_sharding import stream_axis_names
+        return stream_axis_names(self.mesh, self.rules)
+
+    @property
+    def stream_shards(self) -> int:
+        """Stream-axis data-parallel extent of the ambient mesh."""
+        return self.axis_size(self.stream_axes)
+
     def axis_size(self, axes: tuple[str, ...]) -> int:
         n = 1
         for a in axes:

@@ -1,0 +1,25 @@
+"""jax ``shard_map`` version compat, in ONE place.
+
+Two renames happened across jax releases: the entry point moved from
+``jax.experimental.shard_map`` to a top-level ``jax.shard_map`` export,
+and the replication-checking kwarg went from ``check_rep`` to
+``check_vma``.  Every call site (``distributed.stream_sharding``, the MoE
+dispatch in ``models.layers``) goes through :func:`shard_map_compat` so
+the next rename is a one-line fix.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                   # jax >= 0.5 top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                    # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+CHECK_KW = ("check_vma" if "check_vma"
+            in inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map_compat(body, mesh, in_specs, out_specs, check: bool = False):
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{CHECK_KW: check})

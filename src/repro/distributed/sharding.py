@@ -13,7 +13,14 @@ fsdp      weight storage shard (ZeRO-3 style) -> (data,)
 tensor    tensor-parallel weight dim          -> (model,)
 seq_kv    decode KV-cache sequence dim        -> (model,)   (flash-decoding)
 expert    MoE expert dim (EP hillclimb)       -> ()  baseline / ("model",) EP
+stream    serving stream dim (one video feed) -> (data,)  /  (pod, data)
 None      replicated
+
+The "stream" axis is the serving-side analogue of "batch": the fused
+chunk executor (`decode_execute_batched`) carries one independent video
+stream per leading-axis element, so data-parallel placement over the mesh
+is exact — no cross-stream collectives exist in the chunk computation.
+`repro.distributed.stream_sharding.shard_streams` consumes these rules.
 """
 from __future__ import annotations
 
@@ -43,6 +50,7 @@ SINGLE_POD_RULES = AxisRules(
         "tensor": ("model",),
         "seq_kv": ("model",),
         "expert": (),
+        "stream": ("data",),
     }
 )
 
@@ -53,6 +61,7 @@ MULTI_POD_RULES = AxisRules(
         "tensor": ("model",),
         "seq_kv": ("model",),
         "expert": (),
+        "stream": ("pod", "data"),
     }
 )
 
@@ -79,13 +88,15 @@ MULTI_POD_RULES_KVREP = AxisRules(
 )
 # Vision: pure data parallelism — small convnets replicate weights and
 # shard batch over every chip; TP for 25-100M-param models is overhead.
+# Serving streams ride the same placement: the tiny edge detector is
+# replicated, so streams can spread over the model axis too.
 SINGLE_POD_RULES_DP = AxisRules(
     {"batch": ("data", "model"), "fsdp": (), "tensor": (), "seq_kv": (),
-     "expert": ()}
+     "expert": (), "stream": ("data", "model")}
 )
 MULTI_POD_RULES_DP = AxisRules(
     {"batch": ("pod", "data", "model"), "fsdp": (), "tensor": (),
-     "seq_kv": (), "expert": ()}
+     "seq_kv": (), "expert": (), "stream": ("pod", "data", "model")}
 )
 
 _NAMED_RULES = {

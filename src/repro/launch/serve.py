@@ -100,7 +100,8 @@ def main(argv=None):
             packet = encode_hybrid(np.asarray(frames), alloc[c],
                                    tr1=0.05, tr2=0.10)
             b, s, types = runtime.process_chunk(c, t, packet)
-            lat = runtime.compute_latency(types, packet.total_bits, alloc[c])
+            lat = runtime.compute_latency(types, packet.total_bits, alloc[c],
+                                          stream=c)
             nms = jax.jit(lambda bb, ss: D.greedy_nms(bb, ss,
                                                       iou_thresh=0.4,
                                                       top_k=16))

@@ -372,10 +372,7 @@ def moe_block(x, w_router, w1, w3, w2, moe: MoEConfig):
     reduced with one psum over the tensor axis after token combine.
     """
     from jax.sharding import PartitionSpec as P
-    try:                                   # jax >= 0.5 top-level export
-        from jax import shard_map
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
+    from repro.distributed.shard_map_compat import shard_map_compat
     from repro.distributed.context import current_ctx
 
     B, S, d = x.shape
@@ -434,16 +431,10 @@ def moe_block(x, w_router, w1, w3, w2, moe: MoEConfig):
         aux = lax.pmean(aux, batch)
         return out.reshape(Bl, S, d), aux
 
-    # replication checking was renamed check_rep -> check_vma across jax
-    # versions; disable it under whichever name this jax accepts
-    import inspect
-    check_kw = ("check_vma" if "check_vma"
-                in inspect.signature(shard_map).parameters else "check_rep")
-    out, aux = shard_map(
+    out, aux = shard_map_compat(
         body, mesh=ctx.mesh,
         in_specs=(P(batch), P(), P(None, None, tensor), P(None, None, tensor),
                   P(None, tensor, None)),
         out_specs=(P(batch), P()),
-        **{check_kw: False},
     )(x, w_router, w1, w3, w2)
     return out, aux

@@ -34,20 +34,63 @@ class StreamState:
 
 class EdgeRuntime:
     def __init__(self, cfg: ServingConfig, detector_params, det_cfg,
-                 costs: PipelineCosts = PipelineCosts()):
+                 costs: PipelineCosts = PipelineCosts(), *,
+                 mesh=None, rules=None):
+        """``mesh``/``rules`` (jax Mesh + AxisRules with a "stream" entry)
+        switch the runtime to sharded mode: n_shards is derived from the
+        mesh's stream extent, streams map to shards round-robin, each
+        chunk's detector dispatch drains only its own shard's queues, and
+        shard i's detector (params replicated per shard) is COMMITTED to
+        mesh device i — the per-shard capacity slice corresponds to a real
+        device, not an accounting fiction."""
+        if (mesh is None) != (rules is None):
+            raise ValueError("sharded mode needs BOTH mesh= and rules= "
+                             "(got only one)")
+        self._shard_infer = None
+        if mesh is not None:
+            from repro.distributed.stream_sharding import stream_shard_count
+            cfg = dataclasses.replace(
+                cfg, n_shards=stream_shard_count(mesh, rules))
         self.cfg = cfg
+        self.n_shards = max(cfg.n_shards, 1)
         self.det_cfg = det_cfg
         self.costs = costs
-        self._infer = jax.jit(
-            lambda frames: D.decode_boxes(
-                D.forward(detector_params, det_cfg, frames), det_cfg))
+
+        # params enter the jit as an ARGUMENT (closure capture would embed
+        # them as constants and the computation would ignore their device)
+        infer_jit = jax.jit(lambda p, frames: D.decode_boxes(
+            D.forward(p, det_cfg, frames), det_cfg))
+
+        def make_infer(params):
+            return lambda frames: infer_jit(params, frames)
+
+        self._infer = make_infer(detector_params)
+        if mesh is not None and self.n_shards > 1:
+            devs = list(mesh.devices.flat)
+            self._shard_infer = [
+                make_infer(jax.device_put(detector_params,
+                                          devs[i % len(devs)]))
+                for i in range(self.n_shards)]
         self.queues = PipelineQueues(cfg, self._infer_batch)
         self.admission = AdmissionController(cfg)
         self.streams: dict[int, StreamState] = {}
         self.deferred = 0
+        self.deferred_by_shard = np.zeros(self.n_shards, np.int64)
+        # pipeline-③ fallback accounting: frames demoted ②->③ under
+        # overload, and whole chunks forced onto reuse (deep overload)
+        self.demoted_frames = np.zeros(self.n_shards, np.int64)
+        self.reuse_fallback_chunks = np.zeros(self.n_shards, np.int64)
 
-    def _infer_batch(self, frames):
-        boxes, scores = self._infer(jnp.asarray(frames))
+    def stream_shard(self, stream: int) -> int:
+        return stream % self.n_shards
+
+    def _infer_batch(self, frames, shard=None):
+        """Shard-aware detector dispatch: in sharded mode the batch runs
+        on the shard's own committed device (jit follows the committed
+        params); otherwise on the single default-device detector."""
+        fn = self._infer if (shard is None or self._shard_infer is None) \
+            else self._shard_infer[shard]
+        boxes, scores = fn(jnp.asarray(frames))
         return list(zip(np.asarray(boxes), np.asarray(scores)))
 
     # ------------------------------------------------------------------
@@ -55,9 +98,11 @@ class EdgeRuntime:
         """Returns per-frame (boxes, scores, types) for one chunk.
 
         All pipeline-①/② frames of the chunk go through ONE padded detector
-        invocation (``PipelineQueues.drain_fused``) instead of one dispatch
-        per frame; admission still reads the queue depths before the chunk
-        is enqueued, and pipeline ③ carries the previous chunk's last
+        invocation (``PipelineQueues.drain_fused``) on the stream's OWN
+        mesh shard instead of one dispatch per frame; admission reads that
+        shard's queue depths before the chunk is enqueued (a hot shard
+        defers its streams to pipeline-③ reuse without stalling the other
+        shards), and pipeline ③ carries the previous chunk's last
         detections across the chunk boundary.
         """
         enc = packet.video
@@ -65,19 +110,26 @@ class EdgeRuntime:
         H, W = packet.anchor_hd.shape[1:]
         types = packet.types.copy()
         prev = self.streams.get(stream)
+        shard = self.stream_shard(stream)
 
         n_infer = int((types != 3).sum())
-        if not self.admission.admit(self.queues.depths, n_infer):
+        if not self.admission.admit_shard(self.queues.shard_depths, shard,
+                                          n_infer):
             # overload: demote transfer frames to reuse, keep chunk anchors
+            self.demoted_frames[shard] += int((types == 2).sum())
             types = np.where(types == 2, 3, types)
             self.deferred += 1
+            self.deferred_by_shard[shard] += 1
             # deep overload: if even anchors-only blows the budget AND we
             # have carried detections to reuse, the whole chunk runs on
             # pipeline ③ (the previous chunk's boxes keep tracking via MVs)
             if prev is not None and \
-                    not self.admission.admit(self.queues.depths,
-                                             int((types != 3).sum())):
+                    not self.admission.admit_shard(self.queues.shard_depths,
+                                                   shard,
+                                                   int((types != 3).sum())):
+                self.demoted_frames[shard] += int((types != 3).sum())
                 types = np.full_like(types, 3)
+                self.reuse_fallback_chunks[shard] += 1
 
         mvs_hd = np.asarray(_upscale_mvs(enc.mv, (H, W)))
 
@@ -88,12 +140,14 @@ class EdgeRuntime:
         for i in range(T):
             if types[i] == 1:
                 self.queues.submit(InferRequest(stream, t, i, 1,
-                                                packet.anchor_hd[i]))
+                                                packet.anchor_hd[i],
+                                                shard=shard))
             elif types[i] == 2:
                 if lr_up is None:
                     lr_up = np.asarray(upscale_nearest(enc.recon, H, W))
-                self.queues.submit(InferRequest(stream, t, i, 2, lr_up[i]))
-        done = self.queues.drain_fused()
+                self.queues.submit(InferRequest(stream, t, i, 2, lr_up[i],
+                                                shard=shard))
+        done = self.queues.drain_fused(shard=shard)
 
         # collect per-frame detections; pipeline ③ reuse fills the gaps
         n_cells = (H // self.det_cfg.stride) * (W // self.det_cfg.stride)
@@ -117,12 +171,21 @@ class EdgeRuntime:
 
     # ------------------------------------------------------------------
     def compute_latency(self, types: np.ndarray, bits: float,
-                        bw_kbps: float) -> dict:
+                        bw_kbps: float, stream: int | None = None) -> dict:
+        """Latency model for one chunk.  With ``stream`` given, queueing
+        delay comes from that stream's shard backlog against the shard's
+        capacity slice (identical to the global estimate at n_shards=1)."""
         n1 = int((types == 1).sum())
         n2 = int((types == 2).sum())
         n3 = int((types == 3).sum())
         t_comp = pipeline_cost(n1, n2, n3, self.costs)
-        t_queue = float(self.queues.depths.sum()) / self.cfg.gpu_capacity_fps
+        if stream is None:
+            t_queue = float(self.queues.depths.sum()) \
+                / self.cfg.gpu_capacity_fps
+        else:
+            shard = self.stream_shard(stream)
+            t_queue = float(self.queues.shard_depths[shard].sum()) \
+                / self.cfg.shard_capacity_fps
         t_trans = bits / max(bw_kbps * 1000.0, 1e-6)
         return {"t_trans": t_trans, "t_queue": t_queue, "t_comp": t_comp,
                 "total": t_trans + t_queue + t_comp}

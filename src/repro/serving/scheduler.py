@@ -13,6 +13,7 @@ Chunk-granular event loop over C streams:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from collections import deque
 from typing import Callable, Optional
 
@@ -25,9 +26,20 @@ f32 = np.float32
 class ServingConfig:
     n_streams: int
     batch_size: int = 8              # DNN executor batch
-    gpu_capacity_fps: float = 120.0
+    gpu_capacity_fps: float = 120.0  # AGGREGATE edge DNN throughput
     latency_budget: float = 1.0
     controller_interval: int = 10
+    # how many ways the stream axis is sharded over the device mesh
+    # (repro.distributed.stream_sharding).  Streams map to shards
+    # round-robin (stream % n_shards); each shard owns an equal slice of
+    # gpu_capacity_fps and admits against its OWN queue depth, so a hot
+    # shard defers its streams to pipeline-③ reuse instead of stalling
+    # the global batch.
+    n_shards: int = 1
+
+    @property
+    def shard_capacity_fps(self) -> float:
+        return self.gpu_capacity_fps / max(self.n_shards, 1)
 
 
 @dataclasses.dataclass
@@ -37,6 +49,7 @@ class InferRequest:
     frame_idx: int
     pipeline: int                    # 1 or 2
     frame: np.ndarray
+    shard: int = 0                   # owning mesh shard (stream % n_shards)
 
 
 class PipelineQueues:
@@ -47,6 +60,17 @@ class PipelineQueues:
         self.q1: deque = deque()
         self.q2: deque = deque()
         self.infer_fn = infer_fn
+        # shard-aware executors (EdgeRuntime in sharded mode) take the
+        # drained shard so the dispatch lands on that shard's device;
+        # plain ``f(frames)`` executors keep working unchanged.  A
+        # ``**kwargs`` wrapper around a shard-aware executor counts too.
+        try:
+            params = inspect.signature(infer_fn).parameters.values()
+            self._infer_takes_shard = any(
+                p.name == "shard" or p.kind is p.VAR_KEYWORD
+                for p in params)
+        except (TypeError, ValueError):
+            self._infer_takes_shard = False
 
     def submit(self, req: InferRequest):
         (self.q1 if req.pipeline == 1 else self.q2).append(req)
@@ -55,18 +79,40 @@ class PipelineQueues:
     def depths(self) -> np.ndarray:
         return np.asarray([len(self.q1), len(self.q2)], f32)
 
-    def drain_fused(self, pad_multiple: Optional[int] = None):
-        """Execute ALL queued requests (① before ②) as ONE padded
-        invocation of ``infer_fn`` — one device dispatch per chunk.
+    @property
+    def shard_depths(self) -> np.ndarray:
+        """(n_shards, 2) queued-request counts per mesh shard.  Row i is
+        the backlog in front of device shard i only — the admission signal
+        when the stream axis is sharded (a hot shard must defer ITS
+        streams without penalizing streams placed on idle shards)."""
+        d = np.zeros((max(self.cfg.n_shards, 1), 2), f32)
+        for req in self.q1:
+            d[req.shard, 0] += 1.0
+        for req in self.q2:
+            d[req.shard, 1] += 1.0
+        return d
 
-        The stacked batch is zero-padded up to the next multiple of
-        ``pad_multiple`` (default: the configured batch size) so the
-        detector sees a small, fixed set of shapes and its jit cache stays
-        warm across chunks with different type mixes.
+    def drain_fused(self, pad_multiple: Optional[int] = None,
+                    shard: Optional[int] = None):
+        """Execute queued requests (① before ②) as ONE padded invocation
+        of ``infer_fn`` — one device dispatch per chunk.
+
+        ``shard`` restricts the drain to that mesh shard's requests (the
+        per-shard detector dispatch of the sharded runtime); other shards'
+        backlogs stay queued.  The stacked batch is zero-padded up to the
+        next multiple of ``pad_multiple`` (default: the configured batch
+        size) so the detector sees a small, fixed set of shapes and its
+        jit cache stays warm across chunks with different type mixes.
         """
-        batch = list(self.q1) + list(self.q2)
-        self.q1.clear()
-        self.q2.clear()
+        if shard is None:
+            batch = list(self.q1) + list(self.q2)
+            self.q1.clear()
+            self.q2.clear()
+        else:
+            batch = [r for r in self.q1 if r.shard == shard] \
+                + [r for r in self.q2 if r.shard == shard]
+            self.q1 = deque(r for r in self.q1 if r.shard != shard)
+            self.q2 = deque(r for r in self.q2 if r.shard != shard)
         if not batch:
             return []
         pad = max(pad_multiple or self.cfg.batch_size, 1)
@@ -74,7 +120,10 @@ class PipelineQueues:
         n_pad = -(-n // pad) * pad
         frames = np.stack([r.frame for r in batch]
                           + [np.zeros_like(batch[0].frame)] * (n_pad - n))
-        outs = self.infer_fn(frames)[:n]
+        if self._infer_takes_shard:
+            outs = self.infer_fn(frames, shard=shard)[:n]
+        else:
+            outs = self.infer_fn(frames)[:n]
         return list(zip(batch, outs))
 
     def drain(self, max_frames: Optional[int] = None):
@@ -102,6 +151,18 @@ class AdmissionController:
         self.cfg = cfg
 
     def admit(self, queue_depths: np.ndarray, n_new_infer: int) -> bool:
+        """Global admission: total backlog vs aggregate capacity."""
         backlog = float(queue_depths.sum()) + n_new_infer
         est_delay = backlog / self.cfg.gpu_capacity_fps
+        return est_delay <= self.cfg.latency_budget
+
+    def admit_shard(self, shard_depths: np.ndarray, shard: int,
+                    n_new_infer: int) -> bool:
+        """Per-shard admission: the stream's OWN shard backlog vs that
+        shard's slice of capacity.  Identical to :meth:`admit` when
+        n_shards == 1; with a sharded mesh, a stream lands on pipeline-③
+        reuse exactly when ITS device is hot — idle shards keep admitting
+        regardless of the global backlog."""
+        backlog = float(np.asarray(shard_depths)[shard].sum()) + n_new_infer
+        est_delay = backlog / self.cfg.shard_capacity_fps
         return est_delay <= self.cfg.latency_budget

@@ -38,10 +38,14 @@ class EnvConfig:
     fps: float = 30.0
     trace: TraceConfig = TraceConfig()
     accuracy_backend: str = "analytic"  # analytic | detector
-    gpu_capacity_fps: float = 120.0     # edge DNN throughput (frames/s)
+    gpu_capacity_fps: float = 120.0     # AGGREGATE edge DNN throughput (fps)
     latency_tau: float = 1.0
     controller_interval: int = 10       # chunks between reallocations (10 s)
     seed: int = 0
+    # stream-axis mesh shards (repro.distributed.stream_sharding): streams
+    # map round-robin to shards, each owning gpu_capacity_fps / n_shards;
+    # queue delay is per-shard, so a hot shard only slows ITS streams
+    n_shards: int = 1
 
 
 # ---------------------------------------------------------------------------
@@ -107,13 +111,23 @@ class MultiStreamEnv:
         self.C = len(cfg.streams)
         self.trace = generate_trace(cfg.trace, 100_000)
         self.t = 0
-        self.queues = np.zeros(2, f32)
+        # (n_shards, 2) ①/② backlogs per mesh shard; the observation keeps
+        # the paper's 2-d aggregate view (sum over shards)
+        self.shard_queues = np.zeros((max(cfg.n_shards, 1), 2), f32)
         self.prev_alloc = np.full(self.C, 1.0 / self.C, f32)
         self.prev_acc = np.full(self.C, 0.5, f32)
         self.prev_anchor_frac = np.full(self.C, 0.1, f32)
         self.detector = detector
         self._rng = np.random.default_rng(cfg.seed)
         self._chunk_cache = {}
+
+    @property
+    def queues(self) -> np.ndarray:
+        """Aggregate (2,) ①/② depths — the paper's §V-A observation."""
+        return self.shard_queues.sum(axis=0)
+
+    def stream_shard(self, c: int) -> int:
+        return c % self.shard_queues.shape[0]
 
     # ------------------------------------------------------------------
     def _chunk(self, c: int):
@@ -180,16 +194,28 @@ class MultiStreamEnv:
             infer_frames_total += out["n_infer"]
             results.append(out)
 
-        # edge GPU queue dynamics (shared across streams)
+        # edge GPU queue dynamics, per mesh shard: each shard serves its
+        # own slice of capacity, and a stream's queueing delay comes from
+        # ITS shard only (identical to the legacy global queue at
+        # n_shards=1 since the round-robin map is then the identity)
+        n_sh = self.shard_queues.shape[0]
         dt = cfg.chunk_frames / cfg.fps
-        served = cfg.gpu_capacity_fps * dt
-        self.queues[0] = max(self.queues[0] + sum(
-            r["n_anchor"] for r in results) - served * 0.6, 0.0)
-        self.queues[1] = max(self.queues[1] + sum(
-            r["n_transfer"] for r in results) - served * 0.4, 0.0)
+        served = cfg.gpu_capacity_fps / n_sh * dt
+        arrivals = np.zeros((n_sh, 2), f32)
+        for c, r in enumerate(results):
+            arrivals[self.stream_shard(c), 0] += r["n_anchor"]
+            arrivals[self.stream_shard(c), 1] += r["n_transfer"]
+        self.shard_queues[:, 0] = np.maximum(
+            self.shard_queues[:, 0] + arrivals[:, 0] - served * 0.6, 0.0)
+        self.shard_queues[:, 1] = np.maximum(
+            self.shard_queues[:, 1] + arrivals[:, 1] - served * 0.4, 0.0)
+        shard_capacity = cfg.gpu_capacity_fps / n_sh
         queue_delay = float(self.queues.sum() / cfg.gpu_capacity_fps)
-        for r in results:
-            r["latency"] += queue_delay
+        for c, r in enumerate(results):
+            r["queue_delay"] = float(
+                self.shard_queues[self.stream_shard(c)].sum()
+                / shard_capacity)
+            r["latency"] += r["queue_delay"]
             r["reward"] = float(
                 0.5 * r["accuracy"]
                 - 0.5 * (r["latency"] > cfg.latency_tau))

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.codec.motion import block_sad
 from repro.kernels.motion_sad.ops import motion_sad
@@ -70,6 +71,45 @@ def test_block_sad_use_kernel_flag_dispatches():
     np.testing.assert_array_equal(np.asarray(mv_a), np.asarray(mv_b))
     np.testing.assert_allclose(np.asarray(sad_a), np.asarray(sad_b),
                                rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=10)
+@given(nby=st.integers(1, 4), nbx=st.integers(1, 5),
+       radius=st.sampled_from([2, 4, 8]), seed=st.integers(0, 9999))
+def test_motion_sad_property_random_shapes(nby, nbx, radius, seed):
+    """Kernel-vs-oracle parity over random macroblock grids, search radii
+    and contents: MVs bit-exact, SADs to fp tolerance.  Runs under the
+    real hypothesis when installed, else the deterministic shim."""
+    H, W = nby * 16, nbx * 16
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cur = jax.random.uniform(k1, (H, W), jnp.float32) * 255
+    ref = jnp.roll(cur, (seed % 3 - 1, -(seed % 5 - 2)), (0, 1)) \
+        + jax.random.normal(k2, (H, W)) * 1.5
+    mv_k, sad_k = motion_sad(cur, ref, radius=radius, interpret=True)
+    mv_o, sad_o = motion_sad_ref(cur, ref, radius)
+    np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_o))
+    np.testing.assert_allclose(np.asarray(sad_k), np.asarray(sad_o),
+                               rtol=1e-6, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(nby=st.integers(1, 3), nbx=st.integers(1, 4),
+       radius=st.sampled_from([2, 4]), period=st.integers(1, 7),
+       vertical=st.booleans())
+def test_motion_sad_property_tie_breaking(nby, nbx, radius, period,
+                                          vertical):
+    """Periodic stripe patterns produce exact SAD ties along whole bands
+    of candidate offsets; both paths must resolve them first-wins in
+    dy-major order (period=1 is the all-ties constant frame)."""
+    H, W = nby * 16, nbx * 16
+    ramp = (jnp.arange(H if vertical else W) % period).astype(jnp.float32)
+    frame = jnp.tile(ramp[:, None], (1, W)) if vertical \
+        else jnp.tile(ramp[None, :], (H, 1))
+    mv_k, sad_k = motion_sad(frame, frame, radius=radius, interpret=True)
+    mv_o, sad_o = motion_sad_ref(frame, frame, radius)
+    np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_o))
+    np.testing.assert_allclose(np.asarray(sad_k), np.asarray(sad_o),
+                               rtol=1e-6, atol=1e-4)
 
 
 def test_motion_sad_batched_entry():

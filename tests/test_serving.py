@@ -43,6 +43,118 @@ def test_admission_defers_on_backlog():
     assert not adm.admit(np.asarray([40.0, 0.0]), 10)
 
 
+def test_admission_per_shard_matches_global_at_one_shard():
+    """admit_shard is the drop-in generalization: identical verdicts to
+    the legacy global controller when n_shards == 1."""
+    cfg = ServingConfig(n_streams=1, gpu_capacity_fps=30.0,
+                        latency_budget=1.0)
+    adm = AdmissionController(cfg)
+    for depth, n_new in [(0.0, 10), (40.0, 10), (25.0, 5), (25.0, 6)]:
+        depths = np.asarray([depth, 0.0])
+        assert adm.admit(depths, n_new) == \
+            adm.admit_shard(depths[None, :], 0, n_new)
+
+
+def test_admission_per_shard_uses_own_backlog_only():
+    cfg = ServingConfig(n_streams=4, n_shards=4, gpu_capacity_fps=120.0,
+                        latency_budget=1.0)
+    adm = AdmissionController(cfg)
+    assert cfg.shard_capacity_fps == 30.0
+    depths = np.zeros((4, 2), np.float32)
+    depths[2] = [40.0, 5.0]                   # only shard 2 is hot
+    for shard in (0, 1, 3):
+        assert adm.admit_shard(depths, shard, 10)
+    assert not adm.admit_shard(depths, 2, 10)
+
+
+def test_drain_fused_pads_to_batch_multiple():
+    """Padding at batch boundaries: n == k*batch dispatches exactly n
+    frames (no spurious pad batch); n == k*batch + 1 rounds up to the
+    next multiple; the pad lanes are zero and their outputs are dropped."""
+    cfg = ServingConfig(n_streams=1, batch_size=4)
+    shapes, payloads = [], []
+
+    def infer(frames):
+        shapes.append(frames.shape[0])
+        payloads.append(frames)
+        return [(np.full((1, 4), i, np.float32), np.zeros(1))
+                for i in range(frames.shape[0])]
+
+    frame = np.ones((8, 8), np.float32)
+    q = PipelineQueues(cfg, infer)
+    for n, expect in [(4, 4), (5, 8), (8, 8), (1, 4)]:
+        for i in range(n):
+            q.submit(InferRequest(0, 0, i, 1, frame))
+        done = q.drain_fused()
+        assert shapes[-1] == expect
+        assert len(done) == n                 # pad outputs dropped
+        # results align 1:1 with the submitted requests, in order
+        assert [r.frame_idx for r, _ in done] == list(range(n))
+        if expect > n:                        # pad lanes are zero frames
+            assert float(np.abs(payloads[-1][n:]).sum()) == 0.0
+    assert q.drain_fused() == []              # empty queues: no dispatch
+    assert len(shapes) == 4
+
+
+def test_drain_fused_per_shard_leaves_other_shards_queued():
+    cfg = ServingConfig(n_streams=2, n_shards=2, batch_size=2)
+    calls = []
+
+    def infer(frames):
+        calls.append(frames.shape[0])
+        return [(np.zeros((1, 4)), np.zeros(1))] * frames.shape[0]
+
+    q = PipelineQueues(cfg, infer)
+    frame = np.zeros((8, 8), np.float32)
+    for i in range(3):
+        q.submit(InferRequest(0, 0, i, 1, frame, shard=0))
+    for i in range(2):
+        q.submit(InferRequest(1, 0, i, 2, frame, shard=1))
+    done0 = q.drain_fused(shard=0)
+    assert len(done0) == 3
+    assert all(r.shard == 0 for r, _ in done0)
+    # shard 1's backlog untouched by shard 0's dispatch
+    np.testing.assert_array_equal(q.shard_depths,
+                                  [[0.0, 0.0], [0.0, 2.0]])
+    done1 = q.drain_fused(shard=1)
+    assert len(done1) == 2 and q.depths.sum() == 0
+
+
+def test_edge_runtime_pipeline3_fallback_accounting():
+    """Overload demotions are attributed to the right shard: ②->③
+    demotions, whole-chunk reuse fallbacks, and per-shard deferrals."""
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.models import detection as D
+    from repro.serving.runtime import EdgeRuntime
+    from repro.sim.video_source import StreamConfig, generate_chunk
+
+    frames, _, _ = generate_chunk(
+        KEY, StreamConfig(height=32, width=48, n_objects=2), 0, 4)
+    packet = encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    cfg = ServingConfig(n_streams=2, n_shards=2, gpu_capacity_fps=1.0,
+                        latency_budget=1.0)   # admits nothing anywhere
+    rt = EdgeRuntime(cfg, params, det_cfg)
+    n2 = int((packet.types == 2).sum())
+    # chunk 0 on stream 0 (shard 0): no carry -> anchors survive, type-2
+    # frames demoted
+    _, _, t0 = rt.process_chunk(0, 0, packet)
+    assert rt.deferred_by_shard.tolist() == [1, 0]
+    assert rt.demoted_frames[0] == n2
+    assert rt.reuse_fallback_chunks[0] == 0
+    # chunk 1 on stream 0: carry exists -> whole chunk to pipeline ③
+    _, _, t1 = rt.process_chunk(0, 1, packet)
+    assert (t1 == 3).all()
+    assert rt.reuse_fallback_chunks.tolist() == [1, 0]
+    assert rt.demoted_frames[0] == n2 * 2 + int((packet.types == 1).sum())
+    # stream 1 lands on shard 1: its counters are independent
+    rt.process_chunk(1, 0, packet)
+    assert rt.deferred_by_shard.tolist() == [2, 1]
+    assert rt.demoted_frames[1] == n2
+    assert rt.deferred == 3
+
+
 def test_hedged_executor_cuts_tail():
     cfg = HedgeConfig(quantile=0.9, min_history=10)
     calls = {"n": 0}
