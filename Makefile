@@ -10,10 +10,16 @@ PY ?= python
 MD_ENV = XLA_FLAGS=--xla_force_host_platform_device_count=4 \
          JAX_PLATFORMS=cpu BISWIFT_FORCED_MULTIDEVICE=4
 
-.PHONY: test test-multidevice bench bench-multidevice
+.PHONY: test test-codec test-multidevice bench bench-multidevice
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# codec/encoder regression net: golden vectors + property tests + kernels
+test-codec:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_codec.py \
+		tests/test_codec_golden.py tests/test_fused_encoder.py \
+		tests/test_fused_pipeline.py tests/test_kernels.py
 
 test-multidevice:
 	$(MD_ENV) PYTHONPATH=src $(PY) -m pytest -x -q

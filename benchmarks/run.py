@@ -62,7 +62,7 @@ def realistic_shape_bench():
     """720p-shaped kernel rows — the resolution the paper's edge actually
     serves, so regressions on real tile counts (45×80 macroblocks) show up
     even though CI runs interpret mode on CPU."""
-    from repro.codec.motion import block_sad
+    from repro.codec.motion import block_sad_scan
     from repro.kernels.motion_sad.ops import motion_sad
     from repro.kernels.qtransfer.ops import qtransfer
     ks = jax.random.split(jax.random.PRNGKey(7), 2)
@@ -70,7 +70,7 @@ def realistic_shape_bench():
     cur = jax.random.uniform(ks[0], (H, W), jnp.float32) * 255
     ref = jnp.roll(cur, (3, -2), (0, 1))
     rows = []
-    scan = jax.jit(lambda c, r: block_sad(c, r, 8))
+    scan = jax.jit(lambda c, r: block_sad_scan(c, r, 8))
     us = _timeit(lambda: scan(cur, ref), n=2)
     rows.append(("motion_sad_scan_720p", us, "r8scan289cand"))
     us = _timeit(lambda: motion_sad(cur, ref, radius=8, interpret=True), n=2)
@@ -218,10 +218,12 @@ def main() -> None:
     all_rows = []
     t0 = time.time()
     from benchmarks.figures import ALL
+    from benchmarks.encoder import encoder_bench
     benches = list(ALL.items()) + [
         (fn.__name__, fn)
         for fn in (kernel_microbench, realistic_shape_bench, pipeline_bench,
-                   codec_bench, stream_sharding_bench, roofline_summary)]
+                   codec_bench, encoder_bench, stream_sharding_bench,
+                   roofline_summary)]
     for name, fn in benches:
         try:
             all_rows.extend(fn())

@@ -70,10 +70,21 @@ def idct2(coefs):
     return jnp.einsum("ji,njk,kl->nil", D, coefs.astype(f32), D)
 
 
-def quantize(coefs, quality):
+def quant_table(quality) -> jnp.ndarray:
+    """The (8, 8) quantization table for a quality factor — computed once
+    per encode and threaded through the per-frame loops (the codecs must
+    not rebuild it per frame)."""
     qtab = JPEG_LUMA_Q50 * quality_scale(quality)
-    qtab = jnp.maximum(qtab, 1.0)
-    return jnp.round(coefs / qtab), qtab
+    return jnp.maximum(qtab, 1.0)
+
+
+def quantize_with_table(coefs, qtab):
+    return jnp.round(coefs / qtab)
+
+
+def quantize(coefs, quality):
+    qtab = quant_table(quality)
+    return quantize_with_table(coefs, qtab), qtab
 
 
 def dequantize(qcoefs, qtab):

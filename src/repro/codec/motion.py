@@ -1,10 +1,25 @@
 """Block motion estimation (16×16 macroblocks, full search ±R integer pel).
 
-Vectorized as a scan over candidate offsets: each step computes a shifted
-whole-frame SAD and block-sums it — JAX/TPU-friendly (no data-dependent
-gathers on the search path).  The warp (motion compensation) is the same
-block-gather primitive the hybrid decoder's quality transfer uses; its
-Pallas TPU kernel lives in ``repro.kernels.qtransfer``.
+Three search paths with identical semantics (dy-major candidate order,
+first-wins tie-breaking):
+
+* ``block_sad_scan`` — the legacy oracle: a ``lax.scan`` over candidate
+  offsets, each step materializing a whole-frame shifted copy of the
+  padded reference.  Correct but HBM-bound: (2R+1)² full-frame slices.
+* ``block_sad`` — the vmapped per-macroblock form the fused decode path
+  uses: each macroblock gathers its (MB+2R)² search window once, then the
+  candidate loop slices inside those resident windows — no whole-frame
+  copies, flat memory in the radius.
+* ``block_sad(use_kernel=True)`` — the Pallas TPU kernel in
+  ``repro.kernels.motion_sad`` (VMEM-resident padded reference, one
+  macroblock row per grid step).
+
+``dtype=jnp.bfloat16`` selects the bf16 storage variant (inputs cast to
+bf16, SADs accumulated in f32) on both the fallback and the kernel.
+
+The warp (motion compensation) is the same block-gather primitive the
+hybrid decoder's quality transfer uses; its Pallas TPU kernel lives in
+``repro.kernels.qtransfer``.
 """
 from __future__ import annotations
 
@@ -24,18 +39,13 @@ def _offsets(radius: int):
     return jnp.stack([dy.reshape(-1), dx.reshape(-1)], axis=1)  # (K, 2)
 
 
-def block_sad(cur, ref, radius: int = 8, *, use_kernel: bool = False):
-    """Returns (mv (nby, nbx, 2) int32, sad (nby, nbx) f32).
+def block_sad_scan(cur, ref, radius: int = 8):
+    """Legacy scan-over-candidates full search — the bit-exactness oracle.
 
-    cur/ref: (H, W) with H, W multiples of 16.  ``use_kernel`` routes
-    through the Pallas kernel in ``repro.kernels.motion_sad`` (interpret
-    mode on CPU), which evaluates every candidate offset against a padded
-    reference band resident in VMEM; this scan — one whole-frame shifted
-    SAD per candidate — is its oracle.
+    cur/ref: (H, W) with H, W multiples of 16.  One whole-frame shifted
+    SAD per candidate offset; kept only as the reference implementation
+    for the vmapped fallback and the Pallas kernel.
     """
-    if use_kernel:
-        from repro.kernels.motion_sad.ops import motion_sad
-        return motion_sad(cur, ref, radius=radius)
     H, W = cur.shape
     nby, nbx = H // MB, W // MB
     pad = radius
@@ -49,6 +59,55 @@ def block_sad(cur, ref, radius: int = 8, *, use_kernel: bool = False):
         shifted = lax.dynamic_slice(refp, (pad + dy, pad + dx), (H, W))
         diff = jnp.abs(cur - shifted)
         sad = diff.reshape(nby, MB, nbx, MB).sum(axis=(1, 3))
+        better = sad < best_sad
+        best_sad = jnp.where(better, sad, best_sad)
+        best_idx = jnp.where(better, idx, best_idx)
+        return (best_sad, best_idx, idx + 1), None
+
+    init = (jnp.full((nby, nbx), jnp.inf, f32),
+            jnp.zeros((nby, nbx), jnp.int32), jnp.int32(0))
+    (best_sad, best_idx, _), _ = lax.scan(step, init, offs)
+    mv = offs[best_idx]  # (nby, nbx, 2)
+    return mv.astype(jnp.int32), best_sad
+
+
+def block_sad(cur, ref, radius: int = 8, *, use_kernel: bool = False,
+              dtype=None):
+    """Returns (mv (nby, nbx, 2) int32, sad (nby, nbx) f32).
+
+    cur/ref: (H, W) with H, W multiples of 16.  ``use_kernel`` routes
+    through the Pallas kernel in ``repro.kernels.motion_sad`` (interpret
+    mode on CPU).  The default path gathers one (MB+2R)² search window per
+    macroblock and evaluates every candidate offset against those resident
+    windows — the same per-block form as the kernel, so memory stays flat
+    in the candidate count instead of materializing (2R+1)² whole-frame
+    shifted copies like ``block_sad_scan``.  ``dtype`` (e.g. bf16) is the
+    input storage dtype; SADs always accumulate in f32.
+    """
+    if use_kernel:
+        from repro.kernels.motion_sad.ops import motion_sad
+        return motion_sad(cur, ref, radius=radius, dtype=dtype)
+    store = dtype or f32
+    H, W = cur.shape
+    nby, nbx = H // MB, W // MB
+    win = MB + 2 * radius
+    refp = jnp.pad(ref.astype(store), radius, mode="edge")
+    # (nby, nbx, MB, MB) current blocks, f32 accumulation
+    curb = cur.astype(store).astype(f32).reshape(
+        nby, MB, nbx, MB).transpose(0, 2, 1, 3)
+    # (nby, nbx, MB+2R, MB+2R) per-block search windows — gathered ONCE
+    by = jnp.arange(nby) * MB
+    bx = jnp.arange(nbx) * MB
+    wins = jax.vmap(lambda y0: jax.vmap(
+        lambda x0: lax.dynamic_slice(refp, (y0, x0), (win, win)))(bx))(by)
+    wins = wins.astype(f32)
+    offs = _offsets(radius)
+
+    def step(carry, off):
+        best_sad, best_idx, idx = carry
+        dy, dx = off[0] + radius, off[1] + radius
+        cand = lax.dynamic_slice(wins, (0, 0, dy, dx), (nby, nbx, MB, MB))
+        sad = jnp.abs(curb - cand).sum(axis=(2, 3))
         better = sad < best_sad
         best_sad = jnp.where(better, sad, best_sad)
         best_idx = jnp.where(better, idx, best_idx)

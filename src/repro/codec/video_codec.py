@@ -9,11 +9,20 @@ Preserves exactly the codec features BiSwift consumes (paper §IV):
     the 5-level ladder of §VI-A).
 
 All functions are jit/vmap-compatible; chunks are (T, H, W) luma in
-[0, 255].
+[0, 255].  ``encode_chunk`` is a SINGLE module-level ``jax.jit`` (config
+static) so every producer shares one compile cache; ``encode_chunk_batched``
+vmaps it over a leading stream axis with the same shape discipline as
+``decode_execute_batched`` — its mesh-sharded twin is
+``repro.distributed.stream_sharding.shard_encode``.
+
+``VideoCodecConfig.use_kernel`` routes the P-frame motion search through
+the ``motion_sad`` Pallas kernel; ``dtype="bfloat16"`` selects the bf16
+kernel/fallback variants (inputs stored bf16, SADs accumulated f32).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +39,14 @@ class VideoCodecConfig:
     search_radius: int = 8
     quality: float = 50.0        # quantizer quality factor (QP analogue)
     gop: int = 30                # I-frame period
+    use_kernel: bool = False     # P-frame search via the motion_sad kernel
+    dtype: str = "float32"       # search storage dtype: float32 | bfloat16
+
+    @property
+    def search_dtype(self):
+        if self.dtype in ("bfloat16", "bf16"):
+            return jnp.bfloat16
+        return None              # motion paths default to f32
 
 
 @jax.tree_util.register_dataclass
@@ -45,36 +62,39 @@ class EncodedChunk:
     frame_diff: jnp.ndarray     # (T,) mean |frame_t - frame_{t-1}| (X_f feature)
 
 
-def _encode_iframe(frame, quality):
+def _encode_iframe(frame, qtab):
     blocks = B.blockify(frame.astype(f32) - 128.0)
-    q, qtab = B.quantize(B.dct2(blocks), quality)
+    q = B.quantize_with_table(B.dct2(blocks), qtab)
     bits = B.entropy_bits(q)
     rec = B.unblockify(B.idct2(B.dequantize(q, qtab)),
                        *frame.shape) + 128.0
-    return jnp.clip(rec, 0.0, 255.0), q, qtab, bits
+    return jnp.clip(rec, 0.0, 255.0), q, bits
 
 
-def _encode_pframe(frame, ref_recon, cfg: VideoCodecConfig):
-    mv, _ = M.block_sad(frame, ref_recon, cfg.search_radius)
+def _encode_pframe(frame, ref_recon, qtab, cfg: VideoCodecConfig):
+    mv, _ = M.block_sad(frame, ref_recon, cfg.search_radius,
+                        use_kernel=cfg.use_kernel, dtype=cfg.search_dtype)
     pred = M.warp_blocks(ref_recon, mv)
     resid = frame.astype(f32) - pred
     blocks = B.blockify(resid)
-    q, qtab = B.quantize(B.dct2(blocks), cfg.quality)
+    q = B.quantize_with_table(B.dct2(blocks), qtab)
     bits = B.entropy_bits(q) + mv.size * 3.0        # MV coding cost proxy
     rec_resid = B.unblockify(B.idct2(B.dequantize(q, qtab)), *frame.shape)
     rec = jnp.clip(pred + rec_resid, 0.0, 255.0)
-    return rec, mv, q, qtab, bits, jnp.mean(jnp.abs(resid))
+    return rec, mv, q, bits, jnp.mean(jnp.abs(resid))
 
 
-def encode_chunk(frames, cfg: VideoCodecConfig) -> EncodedChunk:
-    """frames: (T, H, W).  Frame 0 is the I-frame (chunks align to GOPs)."""
+def _encode_chunk(frames, cfg: VideoCodecConfig) -> EncodedChunk:
+    """Traced body shared by ``encode_chunk`` (one stream) and
+    ``encode_chunk_batched`` (vmap over streams)."""
     T, H, W = frames.shape
     nby, nbx = H // M.MB, W // M.MB
-    rec0, q0, qtab, bits0 = _encode_iframe(frames[0], cfg.quality)
+    qtab = B.quant_table(cfg.quality)        # once per chunk, threaded
+    rec0, q0, bits0 = _encode_iframe(frames[0], qtab)
 
     def step(carry, frame):
         prev_rec = carry
-        rec, mv, q, _, bits, rmag = _encode_pframe(frame, prev_rec, cfg)
+        rec, mv, q, bits, rmag = _encode_pframe(frame, prev_rec, qtab, cfg)
         fdiff = jnp.mean(jnp.abs(frame - prev_rec))
         return rec, (rec, mv, q, bits, rmag, fdiff)
 
@@ -90,6 +110,37 @@ def encode_chunk(frames, cfg: VideoCodecConfig) -> EncodedChunk:
     return EncodedChunk(recon=recon, mv=mv, residual_q=residual_q,
                         qtab=qtab, bits=all_bits,
                         residual_mag=residual_mag, frame_diff=frame_diff)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def encode_chunk(frames, cfg: VideoCodecConfig) -> EncodedChunk:
+    """frames: (T, H, W).  Frame 0 is the I-frame (chunks align to GOPs).
+
+    One jit end to end, config static — all call sites (hybrid encoder,
+    sim producers, benches) share this compile cache instead of wrapping
+    their own ``jax.jit`` per chunk.
+    """
+    return _encode_chunk(frames, cfg)
+
+
+def _encode_batch(frames, cfg: VideoCodecConfig) -> EncodedChunk:
+    """vmap-over-streams traced body: frames (S, T, H, W) -> every
+    EncodedChunk leaf gains a leading stream axis (qtab included, so the
+    batched pytree shards uniformly).  Shared by the single-device jit
+    below and ``repro.distributed.stream_sharding.shard_encode``."""
+    return jax.vmap(lambda f: _encode_chunk(f, cfg))(frames)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def encode_chunk_batched(frames, cfg: VideoCodecConfig) -> EncodedChunk:
+    """frames: (S, T, H, W) — one device dispatch encodes S streams.
+
+    Same shape discipline as ``decode_execute_batched``: the leading axis
+    is the "stream" logical axis, so the mesh-sharded twin
+    (``shard_encode``) splits it over the rule table's stream axes with
+    zero-padding for non-divisible stream counts.
+    """
+    return _encode_batch(frames, cfg)
 
 
 def decode_chunk(enc: EncodedChunk):

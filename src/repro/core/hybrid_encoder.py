@@ -58,6 +58,9 @@ def encode_hybrid(raw_frames, bw_kbps: float, tr1: float, tr2: float,
 
     Host-level orchestration (anchor count is data-dependent); all inner
     compute (codec, JPEG, classification) is jitted JAX.
+    ``codec_overrides`` replaces VideoCodecConfig fields — e.g.
+    ``{"use_kernel": True}`` routes the P-frame search through the Pallas
+    kernel, ``{"dtype": "bfloat16"}`` selects the bf16 search variant.
     """
     raw_frames = jnp.asarray(raw_frames, f32)
     T, H, W = raw_frames.shape
@@ -70,7 +73,10 @@ def encode_hybrid(raw_frames, bw_kbps: float, tr1: float, tr2: float,
     cfg = VideoCodecConfig(quality=ql.quality)
     if codec_overrides:
         cfg = dataclasses.replace(cfg, **codec_overrides)
-    enc = jax.jit(encode_chunk, static_argnums=1)(frames_lr, cfg)
+    # encode_chunk is the module-level jit (config static) — calling it
+    # directly shares one compile cache across every chunk and stream,
+    # where the old per-call jax.jit(...) wrapper retraced every time
+    enc = encode_chunk(frames_lr, cfg)
     video_bits = float(enc.bits.sum())
 
     # 2) frame classification from codec features

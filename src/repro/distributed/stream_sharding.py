@@ -19,6 +19,12 @@ as ``decode_execute_batched``:
 The single-device vmap stays the oracle: ``tests/test_stream_sharding.py``
 forces a 4-device CPU platform in a subprocess and asserts bit-exact
 parity for divisible and non-divisible stream counts.
+
+``shard_encode(mesh, rules, cfg=...)`` is the encoder-side twin: it wraps
+``encode_chunk_batched``'s body the same way (streams are just as
+independent on the encode path), so camera-side chunk encoding scales over
+the same "stream" mesh axes as edge-side execution
+(``tests/test_fused_encoder.py`` holds its parity matrix).
 """
 from __future__ import annotations
 
@@ -71,6 +77,36 @@ def pad_stream_axis(tree, n_shards: int):
         return jnp.pad(x, pad)
 
     return jax.tree.map(one, tree)
+
+
+def shard_encode(mesh: Mesh, rules: AxisRules, *, cfg):
+    """Build the mesh-sharded twin of ``encode_chunk_batched``.
+
+    Returns ``run(frames)`` where frames is (S, T, H, W): the stream axis
+    is zero-padded up to the mesh's stream extent, each device encodes its
+    local slice of streams through the single-jit codec body, and outputs
+    unpad back to S.  Zero-frame lanes are safe — the codec is total on
+    constant frames (the all-ties motion search resolves first-wins) — and
+    they are dropped on exit.  ``cfg`` (``VideoCodecConfig``) is bound at
+    build time: it is a static jit argument."""
+    from repro.codec.video_codec import _encode_batch
+
+    spec = stream_partition_spec(mesh, rules)
+    n_shards = stream_shard_count(mesh, rules)
+
+    sharded = jax.jit(shard_map_compat(
+        lambda f: _encode_batch(f, cfg), mesh=mesh,
+        in_specs=(spec,), out_specs=spec,
+    ))
+
+    def run(frames):
+        frames = jnp.asarray(frames)
+        s = frames.shape[0]
+        (padded,) = pad_stream_axis((frames,), n_shards)
+        out = sharded(padded)
+        return jax.tree.map(lambda x: x[:s], out)
+
+    return run
 
 
 def shard_streams(mesh: Mesh, rules: AxisRules, *, det_cfg,

@@ -11,7 +11,8 @@ blockdct        — 8×8 DCT + quantization (JPEG/codec core) as paired 8×8
 motion_sad      — full-search ±R block-motion SAD: every candidate offset
                   evaluated against a padded reference frame resident in
                   VMEM, one macroblock row per grid step; bit-exact MVs
-                  vs the ``repro.codec.motion.block_sad`` scan oracle.
+                  vs the ``repro.codec.motion.block_sad_scan`` legacy
+                  scan oracle (bf16 staging variant via ``dtype=``).
 
 Each kernel package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper, interpret=True on CPU), ref.py (pure-jnp oracle).

@@ -12,15 +12,19 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("radius", "interpret"))
-def motion_sad(cur, ref, *, radius: int = 8, interpret: bool | None = None):
+@partial(jax.jit, static_argnames=("radius", "interpret", "dtype"))
+def motion_sad(cur, ref, *, radius: int = 8, interpret: bool | None = None,
+               dtype=None):
     """cur/ref: (H, W) or (T, H, W) -> (mv, sad).
 
-    mv: (..., nby, nbx, 2) int32; sad: (..., nby, nbx) f32.
+    mv: (..., nby, nbx, 2) int32; sad: (..., nby, nbx) f32.  ``dtype``
+    selects the VMEM storage variant (bf16 stages operands half-width;
+    SADs still accumulate in f32).
     """
     if interpret is None:
         interpret = not on_tpu()
-    fn = partial(motion_sad_rows, radius=radius, interpret=interpret)
+    fn = partial(motion_sad_rows, radius=radius, interpret=interpret,
+                 dtype=dtype)
     if cur.ndim == 3:
         return jax.vmap(fn)(cur, ref)
     return fn(cur, ref)

@@ -1,11 +1,13 @@
-"""Oracle for the motion-SAD kernel: the scan-based full search in
-``repro.codec.motion.block_sad`` (one whole-frame shifted SAD per candidate
-offset).  The kernel must match its MVs bit-exactly, including first-wins
-tie-breaking over the dy-major candidate order."""
+"""Oracle for the motion-SAD kernel: the LEGACY scan-based full search
+``repro.codec.motion.block_sad_scan`` (one whole-frame shifted SAD per
+candidate offset) — deliberately NOT the vmapped per-window fallback,
+which shares the kernel's resident-window slicing design and could hide a
+symmetric bug.  The kernel must match the scan's MVs bit-exactly,
+including first-wins tie-breaking over the dy-major candidate order."""
 from __future__ import annotations
 
-from repro.codec.motion import block_sad
+from repro.codec.motion import block_sad_scan
 
 
 def motion_sad_ref(cur, ref, radius: int = 8):
-    return block_sad(cur, ref, radius, use_kernel=False)
+    return block_sad_scan(cur, ref, radius)

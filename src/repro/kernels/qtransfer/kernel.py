@@ -10,6 +10,11 @@ and writes the row band.
 GPU implementations do this as per-pixel gathers; re-blocking to macroblock
 granularity matches both the codec structure and the TPU (8, 128) vector
 layout — a 16×W band is a dense contiguous tile.  MVs ride in SMEM.
+
+The bf16 variant (``dtype=jnp.bfloat16`` on ``ops.qtransfer``) stages the
+anchor plane and residual bands in bf16 — the 16×W bands satisfy the bf16
+(16, 128) minimum tile (sublane 16 = MB) — while the gather + residual add
+accumulates in f32 before casting back to the storage dtype.
 """
 from __future__ import annotations
 

@@ -13,12 +13,21 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("radius", "interpret"))
+@partial(jax.jit, static_argnames=("radius", "interpret", "dtype"))
 def qtransfer(anchor, mv, resid, *, radius: int = 16,
-              interpret: bool | None = None):
-    """anchor/resid: (H, W) or (T, H, W); mv: (..., nby, nbx, 2) int32."""
+              interpret: bool | None = None, dtype=None):
+    """anchor/resid: (H, W) or (T, H, W); mv: (..., nby, nbx, 2) int32.
+
+    ``dtype`` selects the VMEM storage variant (bf16 stages the resident
+    anchor plane and residual band half-width; the block gather + residual
+    add accumulates in f32 inside the kernel, and the output comes back in
+    the storage dtype).
+    """
     if interpret is None:
         interpret = not on_tpu()
+    if dtype is not None:
+        anchor = anchor.astype(dtype)
+        resid = resid.astype(dtype)
     fn = partial(qtransfer_rows, radius=radius, interpret=interpret)
     if anchor.ndim == 3:
         return jax.vmap(fn)(anchor, mv, resid)

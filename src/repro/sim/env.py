@@ -19,14 +19,13 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.codec.rate_model import QUALITY_LADDER
 from repro.core.classification import classify_frames, pipeline_fractions
 from repro.rl.a2c import A2CConfig, reward as low_reward
 from repro.sim.network import TraceConfig, allocate, generate_trace
-from repro.sim.video_source import StreamConfig, generate_chunk
+from repro.sim.video_source import StreamConfig, generate_chunk_batched
 
 f32 = np.float32
 
@@ -130,16 +129,29 @@ class MultiStreamEnv:
         return c % self.shard_queues.shape[0]
 
     # ------------------------------------------------------------------
+    def _chunks_for_step(self) -> dict:
+        """All streams' chunks for the current step, produced in batched
+        vmapped renders — one device dispatch per (H, W, N) signature
+        group instead of one per stream.  Content is bit-identical to the
+        per-stream ``generate_chunk`` (same seed-derived params)."""
+        if self._chunk_cache.get("t") != self.t:
+            t0 = self.t * self.cfg.chunk_frames
+            groups: dict = {}
+            for c, sc in enumerate(self.cfg.streams):
+                groups.setdefault(sc.batch_signature, []).append(c)
+            data = {}
+            for ids in groups.values():
+                fr, bx, vd = generate_chunk_batched(
+                    [self.cfg.streams[c] for c in ids], t0,
+                    self.cfg.chunk_frames)
+                fr, bx, vd = np.asarray(fr), np.asarray(bx), np.asarray(vd)
+                for i, c in enumerate(ids):
+                    data[c] = (fr[i], bx[i], vd[i])
+            self._chunk_cache = {"t": self.t, "data": data}
+        return self._chunk_cache["data"]
+
     def _chunk(self, c: int):
-        key = (c, self.t)
-        if key not in self._chunk_cache:
-            sc = self.cfg.streams[c]
-            frames, boxes, valid = generate_chunk(
-                jax.random.PRNGKey(0), sc, self.t * self.cfg.chunk_frames,
-                self.cfg.chunk_frames)
-            self._chunk_cache = {key: (np.asarray(frames), np.asarray(boxes),
-                                       np.asarray(valid))}
-        return self._chunk_cache[key]
+        return self._chunks_for_step()[c]
 
     def total_bandwidth(self) -> float:
         return float(self.trace[self.t % len(self.trace)])

@@ -5,10 +5,18 @@ heterogeneity (§III Fig. 3d): stream 1 = few large objects (robust to low
 resolution), stream 2 = many small objects (needs bandwidth).  Objects are
 textured rectangles moving over a structured background; ground-truth boxes
 are emitted per frame for F1 scoring.
+
+The renderer is split from the per-stream parameter derivation so the
+producer side can batch: ``generate_chunk`` renders one stream;
+``generate_chunk_batched`` stacks the derived object parameters for
+shape-compatible streams and renders them all in ONE vmapped jit — the
+same leading "stream" axis discipline as ``encode_chunk_batched`` /
+``decode_execute_batched`` downstream.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +40,12 @@ class StreamConfig:
     @property
     def max_objects(self) -> int:
         return self.n_objects
+
+    @property
+    def batch_signature(self) -> tuple:
+        """Streams with equal signatures render with identical shapes and
+        can share one ``generate_chunk_batched`` dispatch."""
+        return (self.height, self.width, self.n_objects)
 
 
 # Paper-style heterogeneous stream mix: "stream 1" large+sparse,
@@ -62,21 +76,29 @@ def _background(key, cfg: StreamConfig):
     return base + noise
 
 
-def generate_chunk(key, cfg: StreamConfig, t0: int, n_frames: int):
-    """Returns (frames (T,H,W) [0..255], boxes (T,N,4) cxcywh px, valid (T,N)).
-
-    Deterministic in (cfg.seed, t0) so consecutive chunks are continuous.
-    """
+def _object_params(cfg: StreamConfig) -> dict:
+    """Seed-derived per-stream object/background state (all arrays, so a
+    list of these stacks into one batched pytree)."""
     H, W = cfg.height, cfg.width
     N = cfg.n_objects
     kobj = jax.random.PRNGKey(cfg.seed)
     k1, k2, k3, k4, kbg = jax.random.split(kobj, 5)
-    pos0 = jax.random.uniform(k1, (N, 2), f32) * jnp.array([H, W], f32)
-    vel = (jax.random.uniform(k2, (N, 2), f32) - 0.5) * 2 * cfg.speed
-    size = jax.random.uniform(k3, (N, 2), f32) * (cfg.max_size - cfg.min_size) \
-        + cfg.min_size
-    tex_phase = jax.random.uniform(k4, (N,), f32) * 6.28
-    bg = _background(kbg, cfg)
+    return dict(
+        pos0=jax.random.uniform(k1, (N, 2), f32) * jnp.array([H, W], f32),
+        vel=(jax.random.uniform(k2, (N, 2), f32) - 0.5) * 2 * cfg.speed,
+        size=jax.random.uniform(k3, (N, 2), f32)
+        * (cfg.max_size - cfg.min_size) + cfg.min_size,
+        tex_phase=jax.random.uniform(k4, (N,), f32) * 6.28,
+        bg=_background(kbg, cfg),
+        tex_contrast=jnp.asarray(cfg.texture_contrast, f32),
+    )
+
+
+def _render_chunk(params: dict, t0, n_frames: int, H: int, W: int):
+    """Pure traced renderer shared by the single-stream path and the
+    vmapped batched producer."""
+    pos0, vel, size = params["pos0"], params["vel"], params["size"]
+    tex_phase, bg = params["tex_phase"], params["bg"]
 
     t = t0 + jnp.arange(n_frames, dtype=f32)[:, None, None]     # (T,1,1)
     # positions bounce off walls via triangular wave
@@ -93,7 +115,7 @@ def generate_chunk(key, cfg: StreamConfig, t0: int, n_frames: int):
     hh = size[None, :, 0, None, None] / 2
     ww = size[None, :, 1, None, None] / 2
     inside = ((jnp.abs(yy - cy) <= hh) & (jnp.abs(xx - cx) <= ww))  # (T,N,H,W)
-    tex = cfg.texture_contrast * jnp.sign(
+    tex = params["tex_contrast"] * jnp.sign(
         jnp.sin(0.8 * yy + tex_phase[None, :, None, None])
         * jnp.sin(0.8 * xx + tex_phase[None, :, None, None]))
     obj_pix = jnp.where(inside, 40.0 + jnp.abs(tex), 0.0)
@@ -101,5 +123,39 @@ def generate_chunk(key, cfg: StreamConfig, t0: int, n_frames: int):
 
     boxes = jnp.concatenate([center, jnp.broadcast_to(
         size[None], center.shape)], axis=-1)                     # (T,N,4)
-    valid = jnp.ones((n_frames, N), bool)
+    valid = jnp.ones((n_frames, params["pos0"].shape[0]), bool)
     return frames, boxes, valid
+
+
+def generate_chunk(key, cfg: StreamConfig, t0: int, n_frames: int):
+    """Returns (frames (T,H,W) [0..255], boxes (T,N,4) cxcywh px, valid (T,N)).
+
+    Deterministic in (cfg.seed, t0) so consecutive chunks are continuous.
+    """
+    return _render_chunk(_object_params(cfg), t0, n_frames,
+                         cfg.height, cfg.width)
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def _render_batched(params, t0, n_frames: int, H: int, W: int):
+    return jax.vmap(lambda p: _render_chunk(p, t0, n_frames, H, W))(params)
+
+
+def generate_chunk_batched(cfgs, t0: int, n_frames: int):
+    """Render S shape-compatible streams in one vmapped jit.
+
+    cfgs: sequence of StreamConfig sharing one ``batch_signature``
+    (height, width, n_objects) — heterogeneous mixes group by signature
+    first (see ``repro.sim.env``).  Returns (frames (S,T,H,W),
+    boxes (S,T,N,4), valid (S,T,N)), each stream bit-identical to its
+    ``generate_chunk`` render.
+    """
+    sigs = {cfg.batch_signature for cfg in cfgs}
+    if len(sigs) != 1:
+        raise ValueError(
+            f"generate_chunk_batched needs one shape signature, got {sigs}; "
+            "group heterogeneous stream mixes by cfg.batch_signature")
+    H, W, _ = next(iter(sigs))
+    params = [_object_params(cfg) for cfg in cfgs]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+    return _render_batched(stacked, jnp.asarray(t0, f32), n_frames, H, W)

@@ -1,0 +1,95 @@
+"""Regenerate ``tests/golden/codec_golden.npz`` from the LEGACY scan oracle.
+
+The fixture pins ``EncodedChunk`` field checksums (per-frame recon PSNR,
+bits, residual magnitudes, frame diffs, MV component histograms, quant
+table) for two chunk shapes, computed with the motion search forced
+through ``repro.codec.motion.block_sad_scan`` — the scan-over-candidates
+oracle every newer search path (vmapped fallback, Pallas kernel, batched
+encode) must reproduce bit-exactly in f32.
+
+Run from the repo root whenever the codec *intentionally* changes:
+
+    PYTHONPATH=src python tests/golden/generate_codec_golden.py
+
+and commit the refreshed .npz together with the change that motivated it.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+import repro.codec.motion as M
+import repro.codec.video_codec as VC
+from repro.codec.video_codec import VideoCodecConfig, chunk_psnr
+from repro.sim.video_source import StreamConfig, generate_chunk
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "codec_golden.npz")
+
+# Two chunk shapes: the CI workhorse and a short non-square chunk.
+CASES = {
+    "a": dict(T=4, height=64, width=96, n_objects=3, seed=0,
+              quality=50.0, radius=8),
+    "b": dict(T=3, height=48, width=80, n_objects=5, seed=7,
+              quality=30.0, radius=4),
+}
+
+
+def golden_frames(case: dict):
+    sc = StreamConfig(height=case["height"], width=case["width"],
+                      n_objects=case["n_objects"], seed=case["seed"])
+    frames, _, _ = generate_chunk(None, sc, 0, case["T"])
+    return frames
+
+
+def mv_histograms(mv: np.ndarray, radius: int) -> np.ndarray:
+    """(2, 2R+1) per-component counts over the candidate range."""
+    side = 2 * radius + 1
+    return np.stack([
+        np.bincount(mv[..., i].reshape(-1) + radius, minlength=side)
+        for i in (0, 1)]).astype(np.int64)
+
+
+def checksums(frames, enc, radius: int) -> dict:
+    return {
+        "psnr": np.asarray(chunk_psnr(frames, enc.recon), np.float32),
+        "bits": np.asarray(enc.bits, np.float32),
+        "residual_mag": np.asarray(enc.residual_mag, np.float32),
+        "frame_diff": np.asarray(enc.frame_diff, np.float32),
+        "qtab": np.asarray(enc.qtab, np.float32),
+        "mv_hist": mv_histograms(np.asarray(enc.mv), radius),
+    }
+
+
+def encode_with_scan_oracle(frames, cfg: VideoCodecConfig):
+    """Encode with the motion search pinned to the legacy scan oracle —
+    a fresh jit around the unjitted body so the module-level
+    ``encode_chunk`` cache never sees the patched search."""
+    orig = M.block_sad
+    M.block_sad = lambda cur, ref, radius=8, **_kw: \
+        M.block_sad_scan(cur, ref, radius)
+    try:
+        return jax.jit(VC._encode_chunk, static_argnums=1)(frames, cfg)
+    finally:
+        M.block_sad = orig
+
+
+def main() -> None:
+    payload = {}
+    for name, case in CASES.items():
+        frames = golden_frames(case)
+        cfg = VideoCodecConfig(quality=case["quality"],
+                               search_radius=case["radius"])
+        enc = encode_with_scan_oracle(frames, cfg)
+        for key, val in checksums(frames, enc, case["radius"]).items():
+            payload[f"{name}_{key}"] = val
+        print(f"case {name}: shape {tuple(frames.shape)} "
+              f"psnr {payload[f'{name}_psnr']}")
+    np.savez(OUT, **payload)
+    print(f"wrote {OUT} ({len(payload)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

@@ -78,6 +78,29 @@ def test_video_codec_quality_and_bits_monotone():
     assert float(chunk_psnr(frames, hi.recon).min()) > 28.0
 
 
+def test_qtab_computed_once_and_threaded(monkeypatch):
+    """The encoder builds the quant table ONCE per chunk from cfg.quality
+    and threads it through the I-frame and every P-frame — the legacy path
+    rebuilt (and discarded) it per frame inside B.quantize."""
+    import repro.codec.video_codec as VC
+    calls = []
+    orig = B.quant_table
+    monkeypatch.setattr(B, "quant_table",
+                        lambda q: (calls.append(1), orig(q))[1])
+    cfg = VideoCodecConfig(quality=42.0)
+    jax.eval_shape(lambda f: VC._encode_chunk(f, cfg),
+                   jax.ShapeDtypeStruct((3, 32, 48), jnp.float32))
+    assert len(calls) == 1, \
+        f"quant_table built {len(calls)}x during one chunk trace"
+    monkeypatch.undo()
+    # the threaded table is the cfg-quality table (I-frame included)
+    frames, _, _ = generate_chunk(KEY, StreamConfig(height=32, width=48),
+                                  0, 2)
+    enc = encode_chunk(frames, cfg)
+    np.testing.assert_array_equal(np.asarray(enc.qtab),
+                                  np.asarray(B.quant_table(42.0)))
+
+
 def test_ladder_selection():
     assert ladder_for_bandwidth(400.0) == 0
     assert ladder_for_bandwidth(1200.0) >= 1

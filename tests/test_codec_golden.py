@@ -1,0 +1,113 @@
+"""Codec golden-vector regression net (ISSUE 3).
+
+``tests/golden/codec_golden.npz`` pins EncodedChunk field checksums
+(per-frame recon PSNR, bits, residual magnitudes, frame diffs, MV
+histograms, quant table) computed with the motion search forced through
+the LEGACY scan oracle (``block_sad_scan``).  Every production search
+path must reproduce those checksums:
+
+  * the vmapped per-macroblock fallback (``encode_chunk`` default) and
+    the Pallas kernel path (``use_kernel=True``) — bit-exact in f32,
+  * ``encode_chunk_batched`` — bit-exact in f32 lane-for-lane,
+  * the bf16 dtype-policy variants — within the documented tolerance
+    contract (docs/fused_encoder.md): MVs may move between near-tied
+    candidates, so PSNR within 1 dB, bits within 5 %, residual magnitude
+    within 5 %, MV histograms within 10 % total-count L1 drift.
+
+Regenerate the fixture ONLY for intentional codec changes:
+``PYTHONPATH=src python tests/golden/generate_codec_golden.py``.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "golden"))
+from generate_codec_golden import (CASES, checksums, encode_with_scan_oracle,
+                                   golden_frames, mv_histograms)  # noqa: E402
+from repro.codec.video_codec import (VideoCodecConfig, encode_chunk,
+                                     encode_chunk_batched)  # noqa: E402
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "codec_golden.npz")
+GOLDEN = dict(np.load(GOLDEN_PATH))
+
+
+def _case_cfg(case, **overrides):
+    return VideoCodecConfig(quality=case["quality"],
+                            search_radius=case["radius"], **overrides)
+
+
+def _assert_bit_exact(name, got: dict):
+    for key, val in got.items():
+        np.testing.assert_array_equal(
+            val, GOLDEN[f"{name}_{key}"],
+            err_msg=f"{name}_{key} diverged from the scan-oracle golden")
+
+
+def _assert_bf16_tolerance(name, got: dict):
+    g = {k: GOLDEN[f"{name}_{k}"] for k in got}
+    np.testing.assert_allclose(got["psnr"], g["psnr"], atol=1.0)
+    np.testing.assert_allclose(got["bits"], g["bits"], rtol=0.05)
+    np.testing.assert_allclose(got["residual_mag"], g["residual_mag"],
+                               rtol=0.05)
+    np.testing.assert_array_equal(got["qtab"], g["qtab"])
+    total = g["mv_hist"].sum(axis=1, keepdims=True)
+    l1 = np.abs(got["mv_hist"] - g["mv_hist"]).sum(axis=1)
+    assert (l1 <= 0.1 * total[:, 0] + 1).all(), \
+        f"{name} bf16 MV histogram drifted more than 10%: L1={l1}"
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_scan_oracle_reproduces_golden(name):
+    """The committed fixture IS the scan oracle's output — guards against
+    silent drift of the oracle itself (or of the synthetic source)."""
+    case = CASES[name]
+    frames = golden_frames(case)
+    enc = encode_with_scan_oracle(frames, _case_cfg(case))
+    _assert_bit_exact(name, checksums(frames, enc, case["radius"]))
+
+
+@pytest.mark.parametrize("name", list(CASES))
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["vmapped_fallback", "kernel"])
+def test_encode_paths_bit_exact_f32(name, use_kernel):
+    case = CASES[name]
+    frames = golden_frames(case)
+    enc = encode_chunk(frames, _case_cfg(case, use_kernel=use_kernel))
+    _assert_bit_exact(name, checksums(frames, enc, case["radius"]))
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_encode_batched_bit_exact_f32(name):
+    """Every lane of the batched encoder reproduces the golden — the
+    stream vmap must not perturb the per-stream computation."""
+    case = CASES[name]
+    frames = golden_frames(case)
+    batch = jnp.stack([frames, frames, frames])
+    enc = encode_chunk_batched(batch, _case_cfg(case))
+    for s in range(batch.shape[0]):
+        lane = jax.tree.map(lambda x: x[s], enc)
+        _assert_bit_exact(name, checksums(frames, lane, case["radius"]))
+
+
+@pytest.mark.parametrize("name", list(CASES))
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["vmapped_fallback", "kernel"])
+def test_encode_bf16_within_tolerance(name, use_kernel):
+    case = CASES[name]
+    frames = golden_frames(case)
+    enc = encode_chunk(frames, _case_cfg(case, use_kernel=use_kernel,
+                                         dtype="bfloat16"))
+    _assert_bf16_tolerance(name, checksums(frames, enc, case["radius"]))
+
+
+def test_golden_fixture_is_complete():
+    expected = {f"{n}_{k}" for n in CASES
+                for k in ("psnr", "bits", "residual_mag", "frame_diff",
+                          "qtab", "mv_hist")}
+    assert set(GOLDEN) == expected
