@@ -10,7 +10,16 @@ PY ?= python
 MD_ENV = XLA_FLAGS=--xla_force_host_platform_device_count=4 \
          JAX_PLATFORMS=cpu BISWIFT_FORCED_MULTIDEVICE=4
 
-.PHONY: test test-codec test-multidevice bench bench-multidevice
+.PHONY: lint test test-codec test-multidevice bench bench-smoke \
+	bench-multidevice
+
+# first CI gate (the CI lint job runs exactly this target).  ruff check
+# blocks; the formatter check is non-blocking (leading -) until a
+# dedicated `ruff format` commit establishes the baseline — flip it to
+# blocking there.  Config in ruff.toml.
+lint:
+	ruff check src tests benchmarks
+	-ruff format --check src tests benchmarks
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -26,6 +35,11 @@ test-multidevice:
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+# tiny shapes, 1 rep: catches import/trace breakage in bench code without
+# timing noise (the CI bench-smoke job)
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --smoke
 
 bench-multidevice:
 	PYTHONPATH=src $(PY) -m benchmarks.run --multidevice

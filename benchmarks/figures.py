@@ -10,8 +10,6 @@ fig14  — accuracy/throughput across video types (paper Fig. 14)
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -62,10 +60,8 @@ def fig11_end_to_end(n_streams=4, total_bw_kbps=16000.0):
     rows = []
     for name, fn in BASELINES.items():
         alloc = even_allocation(total_bw_kbps, n_streams)
-        t0 = time.perf_counter()
         rs = [fn(f, b, v, alloc[i], sc)
               for i, (sc, f, b, v) in enumerate(data)]
-        wall = time.perf_counter() - t0
         acc = float(np.mean([r["accuracy"] for r in rs]))
         lat = float(np.mean([r["latency"] for r in rs]))
         bits = float(np.sum([r["bits"] for r in rs]))

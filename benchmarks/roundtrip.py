@@ -1,0 +1,134 @@
+"""Fused encode->decode round-trip benchmark rows (``roundtrip_*`` in
+BENCH_pipeline.json).
+
+Single-device (invoked from ``benchmarks.run``): the sequential two-jit
+path (per-stream ``roundtrip_oracle`` — ``encode_chunk`` jit + host glue +
+``decode_execute_chunk`` jit) against the fused ``roundtrip_batched`` jit
+at 1..8 streams, plus a mixed-bitrate-ladder row through the padded
+heterogeneous dispatch.
+
+Multi-device: run this module directly under a forced multi-device CPU
+platform (``benchmarks.run`` spawns it the same way as
+``benchmarks.stream_shard``); it prints a JSON payload of
+``roundtrip_sharded_*`` rows as the LAST stdout line, comparing the
+single-device batched jit to ``shard_roundtrip`` over the mesh.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+
+def _inputs(S, H=64, W=96, T=4):
+    from repro.models import detection as D
+    from repro.sim.video_source import StreamConfig, generate_chunk
+
+    data = [generate_chunk(None, StreamConfig(height=H, width=W,
+                                              n_objects=3, seed=s), 0, T)
+            for s in range(S)]
+    raw = jnp.stack([d[0] for d in data])
+    gtb = jnp.stack([d[1] for d in data])
+    gtv = jnp.stack([d[2] for d in data])
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    scalars = dict(tr1=jnp.full((S,), 0.05), tr2=jnp.full((S,), 0.1),
+                   bw_kbps=jnp.full((S,), 4000.0),
+                   queue_delay=jnp.zeros((S,)))
+    return raw, gtb, gtv, params, det_cfg, scalars
+
+
+def roundtrip_bench():
+    """Sequential two-jit vs fused round-trip, 1..8 streams + mixed
+    ladder (single device)."""
+    from benchmarks.run import SMOKE, _timeit
+    from repro.core.roundtrip import (RoundtripConfig, roundtrip_batched,
+                                      roundtrip_ladder_batched,
+                                      roundtrip_oracle)
+
+    rows = []
+    stream_counts = (1, 2) if SMOKE else (1, 2, 4, 8)
+    levels = (4, 3, 2)               # the mixed-ladder row's rungs
+    S_max = max(*stream_counts, len(levels))
+    raw, gtb, gtv, params, det_cfg, sc = _inputs(S_max)
+    cfg = RoundtripConfig(level=3, det_cfg=det_cfg)
+    T = raw.shape[1]
+
+    for S in stream_counts:
+        def seq():
+            return [roundtrip_oracle(
+                raw[s], gtb[s], gtv[s], params, tr1=0.05, tr2=0.1,
+                bw_kbps=4000.0, cfg=cfg) for s in range(S)]
+
+        us_seq = _timeit(seq, n=3)
+        rows.append((f"roundtrip_seq_twojit_{S}stream", us_seq,
+                     "encode-jit+host-glue+decode-jit"))
+
+        def fused():
+            return roundtrip_batched(
+                raw[:S], gtb[:S], gtv[:S], params, tr1=sc["tr1"][:S],
+                tr2=sc["tr2"][:S], bw_kbps=sc["bw_kbps"][:S],
+                queue_delay=sc["queue_delay"][:S], cfg=cfg)
+
+        us_fused = _timeit(fused, n=3)
+        fps = S * T / (us_fused / 1e6)
+        rows.append((f"roundtrip_fused_{S}stream", us_fused,
+                     f"fps:{fps:.0f};speedup_vs_twojit:"
+                     f"{us_seq / max(us_fused, 1e-9):.2f}x"))
+
+    S = len(levels)
+
+    def ladder():
+        return roundtrip_ladder_batched(
+            raw[:S], gtb[:S], gtv[:S], params, tr1=sc["tr1"][:S],
+            tr2=sc["tr2"][:S], bw_kbps=sc["bw_kbps"][:S],
+            queue_delay=sc["queue_delay"][:S], levels=levels, cfg=cfg)
+
+    us_lad = _timeit(ladder, n=3)
+    rungs = "/".join(str(lv) for lv in levels)
+    rows.append((f"roundtrip_fused_mixed_ladder_{S}stream", us_lad,
+                 f"rungs:{rungs};one-padded-jit"))
+    return rows
+
+
+def main():
+    """Forced-multi-device entry: sharded vs single-device round trip."""
+    from benchmarks.run import SMOKE, _timeit
+    from repro.core.roundtrip import RoundtripConfig, roundtrip_batched
+    from repro.distributed.sharding import SINGLE_POD_RULES
+    from repro.distributed.stream_sharding import (shard_roundtrip,
+                                                   stream_shard_count)
+
+    n_dev = len(jax.devices())
+    S = 4 if SMOKE else 8
+    raw, gtb, gtv, params, det_cfg, sc = _inputs(S)
+    cfg = RoundtripConfig(level=3, det_cfg=det_cfg)
+    T = raw.shape[1]
+
+    def single():
+        return roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+
+    us_single = _timeit(single)
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    run = shard_roundtrip(mesh, SINGLE_POD_RULES, cfg=cfg)
+    n_shards = stream_shard_count(mesh, SINGLE_POD_RULES)
+
+    def sharded():
+        return run(raw, gtb, gtv, params, **sc)
+
+    us_sharded = _timeit(sharded)
+    fps = S * T / (us_sharded / 1e6)
+    rows = [
+        [f"roundtrip_batched_single_dev_{S}streams", us_single,
+         f"oracle_{n_dev}devhost"],
+        [f"roundtrip_sharded_{n_shards}shard_{S}streams", us_sharded,
+         f"fps:{fps:.0f};vs_single:"
+         f"{us_single / max(us_sharded, 1e-9):.2f}x"],
+    ]
+    print(json.dumps(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,16 @@
 
 One function per paper table/figure (benchmarks/figures.py) + kernel
 micro-benchmarks (toy and 720p-shaped) + the fused-vs-legacy chunk
-pipeline comparison + multi-stream runtime throughput + the roofline
-summary from the dry-run artifacts.  Prints ``name,us_per_call,derived``
-CSV rows and mirrors every row into ``BENCH_pipeline.json`` so the perf
-trajectory is machine-readable across PRs.
+pipeline comparison + fused round-trip rows + multi-stream runtime
+throughput + the roofline summary from the dry-run artifacts.  Prints
+``name,us_per_call,derived`` CSV rows and mirrors every row into
+``BENCH_pipeline.json`` so the perf trajectory is machine-readable across
+PRs.
+
+``--smoke`` (CI bench-smoke job): tiny shapes, 1 rep, no warmup — every
+bench still imports, traces and executes, so import/trace breakage in
+bench code is caught without timing noise.  Timings from a smoke run are
+meaningless; the JSON payload is tagged ``"smoke": true``.
 """
 from __future__ import annotations
 
@@ -20,8 +26,14 @@ import numpy as np
 
 BENCH_JSON = os.environ.get("BENCH_JSON", "BENCH_pipeline.json")
 
+# set by --smoke (or inherited by subprocess children via the env var):
+# 1 rep, no warmup, tiny shapes in the shape-parameterized benches
+SMOKE = os.environ.get("BISWIFT_BENCH_SMOKE") == "1"
+
 
 def _timeit(fn, *args, n=3, warmup=1):
+    if SMOKE:
+        n, warmup = 1, 0
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
@@ -61,24 +73,27 @@ def kernel_microbench():
 def realistic_shape_bench():
     """720p-shaped kernel rows — the resolution the paper's edge actually
     serves, so regressions on real tile counts (45×80 macroblocks) show up
-    even though CI runs interpret mode on CPU."""
+    even though CI runs interpret mode on CPU.  (--smoke shrinks to 144p:
+    same code paths, tiny tile counts.)"""
     from repro.codec.motion import block_sad_scan
     from repro.kernels.motion_sad.ops import motion_sad
     from repro.kernels.qtransfer.ops import qtransfer
     ks = jax.random.split(jax.random.PRNGKey(7), 2)
-    H, W = 720, 1280
+    H, W = (144, 256) if SMOKE else (720, 1280)
+    tag = "144p" if SMOKE else "720p"
     cur = jax.random.uniform(ks[0], (H, W), jnp.float32) * 255
     ref = jnp.roll(cur, (3, -2), (0, 1))
     rows = []
     scan = jax.jit(lambda c, r: block_sad_scan(c, r, 8))
     us = _timeit(lambda: scan(cur, ref), n=2)
-    rows.append(("motion_sad_scan_720p", us, "r8scan289cand"))
+    rows.append((f"motion_sad_scan_{tag}", us, "r8scan289cand"))
     us = _timeit(lambda: motion_sad(cur, ref, radius=8, interpret=True), n=2)
-    rows.append(("kernel_motion_sad_interp_720p", us, "r8band"))
+    rows.append((f"kernel_motion_sad_interp_{tag}", us, "r8band"))
     mv = jax.random.randint(ks[1], (H // 16, W // 16, 2), -8, 9, jnp.int32)
     resid = jnp.zeros((H, W), jnp.float32)
     us = _timeit(lambda: qtransfer(cur, mv, resid, interpret=True), n=2)
-    rows.append(("kernel_qtransfer_interp_720p", us, "45x80blocks"))
+    rows.append((f"kernel_qtransfer_interp_{tag}", us,
+                 f"{H // 16}x{W // 16}blocks"))
     return rows
 
 
@@ -168,24 +183,37 @@ def _forced_cpu_env(n_devices: int = 4) -> dict:
     return env
 
 
-def stream_sharding_bench():
-    """Sharded-vs-single-device stream throughput (ROADMAP multi-host
-    sharding item).  Runs ``benchmarks.stream_shard`` in a subprocess with
-    a forced 4-device CPU platform — this process has already committed
-    jax to the real platform, and XLA only honours the device-count flag
-    before the first jax import.  On a machine with real accelerators the
-    child inherits them instead (the flag only affects the host platform).
-    """
+def _json_rows_subprocess(module: str, fallback_name: str):
+    """Run a bench module in a subprocess (forced 4-device CPU platform if
+    this process sees fewer than 4 devices — XLA only honours the
+    device-count flag before the first jax import) and parse the JSON row
+    payload from its last stdout line.  On a machine with real
+    accelerators the child inherits them instead (the flag only affects
+    the host platform)."""
     import subprocess
     env = os.environ if not (jax.default_backend() == "cpu"
                              and len(jax.devices()) < 4) \
         else _forced_cpu_env()
-    r = subprocess.run([sys.executable, "-m", "benchmarks.stream_shard"],
+    r = subprocess.run([sys.executable, "-m", module],
                        capture_output=True, text=True, env=env, timeout=900)
     if r.returncode != 0:
         tail = (r.stderr or r.stdout).strip().replace("\n", ";")[-160:]
-        return [("stream_sharding_bench", -1.0, f"ERROR:{tail}")]
+        return [(fallback_name, -1.0, f"ERROR:{tail}")]
     return [tuple(row) for row in json.loads(r.stdout.strip().splitlines()[-1])]
+
+
+def stream_sharding_bench():
+    """Sharded-vs-single-device stream throughput (ROADMAP multi-host
+    sharding item)."""
+    return _json_rows_subprocess("benchmarks.stream_shard",
+                                 "stream_sharding_bench")
+
+
+def roundtrip_sharding_bench():
+    """Mesh-sharded fused round trip vs the single-device batched jit
+    (``benchmarks.roundtrip`` main, forced multi-device child)."""
+    return _json_rows_subprocess("benchmarks.roundtrip",
+                                 "roundtrip_sharding_bench")
 
 
 def roofline_summary():
@@ -204,6 +232,12 @@ def roofline_summary():
 
 
 def main() -> None:
+    global SMOKE
+    if "--smoke" in sys.argv:
+        # export so subprocess children (stream_shard / roundtrip
+        # multi-device benches, --multidevice re-exec) smoke too
+        SMOKE = True
+        os.environ["BISWIFT_BENCH_SMOKE"] = "1"
     # --multidevice: re-run the whole harness on a forced 4-device CPU
     # platform (fresh process; jax in THIS one is already committed)
     if "--multidevice" in sys.argv \
@@ -219,10 +253,12 @@ def main() -> None:
     t0 = time.time()
     from benchmarks.figures import ALL
     from benchmarks.encoder import encoder_bench
+    from benchmarks.roundtrip import roundtrip_bench
     benches = list(ALL.items()) + [
         (fn.__name__, fn)
         for fn in (kernel_microbench, realistic_shape_bench, pipeline_bench,
-                   codec_bench, encoder_bench, stream_sharding_bench,
+                   codec_bench, encoder_bench, roundtrip_bench,
+                   stream_sharding_bench, roundtrip_sharding_bench,
                    roofline_summary)]
     for name, fn in benches:
         try:
@@ -235,9 +271,11 @@ def main() -> None:
         else:
             print(f"{name},{us},{derived}")
     print(f"# total wall: {time.time() - t0:.1f}s")
+    errors = [n for n, _, d in all_rows if str(d).startswith("ERROR")]
     payload = {
         "schema": "biswift-bench-v1",
         "backend": jax.default_backend(),
+        "smoke": SMOKE,
         "wall_s": round(time.time() - t0, 2),
         "rows": [{"name": n, "us_per_call": u, "derived": str(d)}
                  for n, u, d in all_rows],
@@ -245,6 +283,12 @@ def main() -> None:
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {BENCH_JSON} ({len(all_rows)} rows)")
+    if SMOKE and errors:
+        # the smoke gate EXISTS to catch import/trace breakage — an ERROR
+        # row swallowed into a green exit would defeat it (the full
+        # harness stays permissive so one flaky bench can't kill a run)
+        sys.exit(f"# smoke FAILED: {len(errors)} bench(es) errored: "
+                 f"{', '.join(errors)}")
 
 
 if __name__ == "__main__":

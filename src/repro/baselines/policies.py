@@ -16,7 +16,6 @@ per-frame SR); reuse 6 ms.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 import jax.numpy as jnp
@@ -73,7 +72,6 @@ def run_biswift(frames, boxes, valid, bw_kbps, stream_cfg, *,
     # pipeline (the accuracy-first policy keeps them sparse, 7-8%).
     chunk_s = T / fps
     budget_bits = bw_kbps * 1000.0 * chunk_s
-    level0 = ladder_for_bandwidth(bw_kbps)
     video_floor = QUALITY_LADDER[0].bitrate_kbps * 1000.0 * chunk_s
     afford = max(int((budget_bits - video_floor) / 45_000.0), 1)
     anchor_ids = np.nonzero(types == 1)[0]

@@ -11,6 +11,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 f32 = jnp.float32
 
@@ -91,16 +92,63 @@ def dequantize(qcoefs, qtab):
     return qcoefs * qtab
 
 
-def entropy_bits(qcoefs) -> jnp.ndarray:
+def seq_sum(v) -> jnp.ndarray:
+    """Order-stable sequential accumulation of a vector or row-major grid.
+
+    ``lax.scan`` forces left-to-right adds, so the result is independent
+    of XLA's shape-dependent reduce tiling — and inserting 0.0 terms is an
+    exact fp no-op.  That is the property the heterogeneous-ladder padded
+    encode needs: summing valid partials interleaved with zeroed padding
+    partials is BIT-identical to summing the valid partials alone, which a
+    plain ``jnp.sum`` does not guarantee across different canvas sizes.
+
+    1-D input is one scan.  2-D input (a row-major grid of partials)
+    reduces hierarchically — a per-row scan vmapped over rows, then a
+    scan over the row totals — cutting the serial dependency chain from
+    O(n) to O(rows + cols).  Canvas padding zero-extends each row (column
+    suffix) and appends all-zero rows (row suffix), so both scan levels
+    see the unpadded add sequence plus exact no-ops.  Use only on small
+    partial grids (per-block/per-tile sums), never on raw pixels.
+    """
+    def scan1d(x):
+        total, _ = lax.scan(lambda c, t: (c + t, None),
+                            jnp.asarray(0.0, f32), x.astype(f32))
+        return total
+
+    if v.ndim == 2:
+        return scan1d(jax.vmap(scan1d)(v))
+    return scan1d(v.reshape(-1))
+
+
+def entropy_bits(qcoefs, block_mask=None, n_blocks=None,
+                 grid=None) -> jnp.ndarray:
     """Bit-cost proxy: exp-Golomb-style 2*log2(1+|q|)+1 per nonzero coef.
 
     Calibrated against the paper's 5-level ladder in rate_model.py; the
     proxy is monotone in quality and content complexity, which is what the
     bandwidth controller needs.
+
+    The reduction is a fixed-shape per-block partial sum followed by
+    :func:`seq_sum`, so the total is invariant to zero-padded extra
+    blocks.  ``grid`` ((block_rows, block_cols), the frame's 8x8 block
+    grid shape) lets callers opt into the hierarchical two-level scan —
+    pass it whenever the block count is non-trivial.  ``block_mask``
+    ((nblocks,) bool, with ``n_blocks`` the valid-block count) restricts
+    the cost to valid blocks — the heterogeneous-ladder batched encode
+    runs padded frames through one dispatch and must charge bits only for
+    the stream's true extent, bit-exactly vs the unpadded encode.
     """
     a = jnp.abs(qcoefs)
     bits = jnp.where(a > 0, 2.0 * jnp.log2(1.0 + a) + 1.0, 0.0)
-    return bits.sum() + qcoefs.shape[0] * 4.0  # per-block EOB overhead
+    per_block = bits.sum(axis=(1, 2))           # fixed (8, 8) tile reduce
+    if block_mask is not None:
+        per_block = jnp.where(block_mask, per_block, 0.0)
+        overhead = n_blocks * 4.0               # per-block EOB overhead
+    else:
+        overhead = qcoefs.shape[0] * 4.0
+    if grid is not None:
+        per_block = per_block.reshape(grid)
+    return seq_sum(per_block) + overhead
 
 
 def transform_quantize(img, quality):
@@ -108,6 +156,6 @@ def transform_quantize(img, quality):
     H, W = img.shape
     blocks = blockify(img.astype(f32) - 128.0)
     q, qtab = quantize(dct2(blocks), quality)
-    bits = entropy_bits(q)
+    bits = entropy_bits(q, grid=(H // 8, W // 8))
     rec = unblockify(idct2(dequantize(q, qtab)), H, W) + 128.0
     return jnp.clip(rec, 0.0, 255.0), bits

@@ -5,7 +5,6 @@ tuned so that anchors + video share the stream's allocated bandwidth.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.codec import blockdct as B
@@ -21,7 +20,7 @@ def jpeg_encode_decode(img, quality):
 def jpeg_bits(img, quality):
     blocks = B.blockify(img.astype(f32) - 128.0)
     q, _ = B.quantize(B.dct2(blocks), quality)
-    return B.entropy_bits(q)
+    return B.entropy_bits(q, grid=(img.shape[0] // 8, img.shape[1] // 8))
 
 
 def psnr(a, b, peak: float = 255.0):

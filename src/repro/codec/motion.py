@@ -23,7 +23,6 @@ hybrid decoder's quality transfer uses; its Pallas TPU kernel lives in
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

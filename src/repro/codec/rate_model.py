@@ -31,6 +31,18 @@ QUALITY_LADDER = (
 )
 
 
+# fraction of a stream's allocation the video encoder may spend — the
+# rest is headroom reserved for JPEG anchors (§IV-A).  Shared by the
+# legacy host encoder and the fused round-trip's ladder selection so the
+# two paths can never silently pick different rungs.
+ANCHOR_HEADROOM = 0.65
+
+
+def video_bandwidth_share(bw_kbps: float) -> float:
+    """The bandwidth the ladder selection sees after anchor headroom."""
+    return bw_kbps * ANCHOR_HEADROOM
+
+
 def ladder_for_bandwidth(bw_kbps: float, headroom: float = 0.95) -> int:
     """Highest ladder level whose bitrate fits within bw_kbps*headroom.
 
@@ -44,11 +56,27 @@ def ladder_for_bandwidth(bw_kbps: float, headroom: float = 0.95) -> int:
     return level
 
 
+def lr_shape_for_scale(scale: float, H: int, W: int) -> tuple[int, int]:
+    """The multiple-of-16 (h, w) a ``scale`` fraction of (H, W) rounds to.
+
+    The single source of truth for the downscale shape arithmetic: the
+    heterogeneous-ladder padding contract (extents, canvases, sharded
+    lanes) assumes the host-side extent computation and the shapes
+    :func:`downscale` actually produces can never disagree."""
+    h = max(int(H * scale) // 16 * 16, 16)
+    w = max(int(W * scale) // 16 * 16, 16)
+    return h, w
+
+
+def ladder_lr_shape(level: int, H: int, W: int) -> tuple[int, int]:
+    """The (h, w) LR shape ``downscale`` produces for a ladder rung."""
+    return lr_shape_for_scale(QUALITY_LADDER[level].scale, H, W)
+
+
 def downscale(frames, scale: float):
     """(T, H, W) average-pool downscale to a multiple-of-16 size."""
     T, H, W = frames.shape
-    h = max(int(H * scale) // 16 * 16, 16)
-    w = max(int(W * scale) // 16 * 16, 16)
+    h, w = lr_shape_for_scale(scale, H, W)
     fy, fx = H // h, W // w
     if fy * h != H or fx * w != W:
         # crop to divisible region, then pool
@@ -57,13 +85,17 @@ def downscale(frames, scale: float):
     return x.mean(axis=(2, 4))
 
 
-def upscale_nearest(frames, H: int, W: int):
+def upscale_nearest(frames, H: int, W: int, src_hw=None):
     """(T, h, w) -> (T, H, W) nearest-neighbour (the cheap decoder upscale).
 
     Index-mapped so non-integer factors (e.g. the 2/3-scale 720p level)
-    work exactly.
+    work exactly.  ``src_hw`` ((h, w), traced ints) overrides the source
+    extent when ``frames`` carries a padded margin beyond the valid region
+    (heterogeneous-ladder batches): the index map then only ever gathers
+    valid pixels, so the result is bit-identical to upscaling the unpadded
+    array.
     """
-    T, h, w = frames.shape
+    h, w = frames.shape[1:] if src_hw is None else src_hw
     yi = jnp.clip(jnp.arange(H) * h // H, 0, h - 1)
     xi = jnp.clip(jnp.arange(W) * w // W, 0, w - 1)
     return frames[:, yi][:, :, xi]

@@ -18,6 +18,17 @@ vmaps it over a leading stream axis with the same shape discipline as
 ``VideoCodecConfig.use_kernel`` routes the P-frame motion search through
 the ``motion_sad`` Pallas kernel; ``dtype="bfloat16"`` selects the bf16
 kernel/fallback variants (inputs stored bf16, SADs accumulated f32).
+
+Heterogeneous bitrate ladders: ``encode_chunk_ladder_batched`` encodes a
+mixed-rung stream set (different per-stream LR resolutions and QPs) in ONE
+padded dispatch.  Streams are padded up to a common (Hp, Wp); a per-stream
+valid extent (h, w) is threaded through the motion search, quantization
+and the rate model as static-shape masks, and the padded margin is kept
+edge-replicated so every valid macroblock sees exactly the search windows
+it would see in an unpadded encode.  The contract (held by
+``tests/test_fused_encoder.py``) is BIT-exactness in f32: lane s of the
+padded batch equals ``encode_chunk`` on stream s's own unpadded frames,
+restricted to its valid extent.
 """
 from __future__ import annotations
 
@@ -62,40 +73,137 @@ class EncodedChunk:
     frame_diff: jnp.ndarray     # (T,) mean |frame_t - frame_{t-1}| (X_f feature)
 
 
-def _encode_iframe(frame, qtab):
+def _edge_extend(frame, h, w):
+    """Overwrite the padded margin of ``frame`` ((Hp, Wp)) with edge
+    replication of the valid (h, w) region (clipped-index gather — equal to
+    ``jnp.pad(frame[:h, :w], ..., mode="edge")`` for traced extents).
+
+    This is the invariant the heterogeneous-ladder encode maintains on
+    every reference frame: a valid macroblock's search/warp window then
+    reads the same edge-replicated content it would read from the radius
+    padding of an unpadded encode, which is what makes the masked path
+    bit-exact."""
+    Hp, Wp = frame.shape
+    yy = jnp.minimum(jnp.arange(Hp), h - 1)
+    xx = jnp.minimum(jnp.arange(Wp), w - 1)
+    return frame[yy][:, xx]
+
+
+def _extent_masks(Hp: int, Wp: int, h, w) -> dict:
+    """Static-shape validity masks + counts for a traced (h, w) extent."""
+    mb = M.MB
+    return dict(
+        h=h, w=w,
+        pix=(jnp.arange(Hp)[:, None] < h) & (jnp.arange(Wp)[None, :] < w),
+        bm8=((jnp.arange(Hp // 8)[:, None] < h // 8)
+             & (jnp.arange(Wp // 8)[None, :] < w // 8)).reshape(-1),
+        mb=(jnp.arange(Hp // mb)[:, None] < h // mb)
+        & (jnp.arange(Wp // mb)[None, :] < w // mb),
+        n8=(h // 8) * (w // 8),
+        nmb=(h // mb) * (w // mb),
+        # 1/(h*w) as a correctly-rounded f32 reciprocal (the masked mean
+        # multiplies by this instead of dividing by a traced count)
+        recip=jnp.asarray(1.0, f32) / jnp.asarray(h * w, f32),
+    )
+
+
+def _mean_abs(x, masks) -> jnp.ndarray:
+    """mean(|x|), reduced as fixed 16x16 tile partials + an order-stable
+    hierarchical accumulation (``blockdct.seq_sum`` on the 2-D tile
+    grid: per-row scans, then a scan over row totals).
+
+    Both the plain and the masked form reduce THIS way so the
+    heterogeneous-ladder padded encode stays bit-exact: the masked form
+    zeroes the padded margin, whose tile partials then contribute exact
+    fp no-ops — a column suffix within each row and a suffix of all-zero
+    rows — to the same add sequence the unpadded encode performs over its
+    (fewer) valid tiles."""
+    Hp, Wp = x.shape
+    mb = M.MB
+    a = jnp.abs(x)
+    if masks is None:
+        recip = jnp.asarray(1.0, f32) / jnp.asarray(Hp * Wp, f32)
+    else:
+        a = jnp.where(masks["pix"], a, 0.0)
+        recip = masks["recip"]
+    tiles = a.reshape(Hp // mb, mb, Wp // mb, mb).sum(axis=(1, 3))
+    return B.seq_sum(tiles) * recip
+
+
+def _encode_iframe(frame, qtab, masks=None):
+    grid8 = (frame.shape[0] // 8, frame.shape[1] // 8)
     blocks = B.blockify(frame.astype(f32) - 128.0)
     q = B.quantize_with_table(B.dct2(blocks), qtab)
-    bits = B.entropy_bits(q)
+    if masks is None:
+        bits = B.entropy_bits(q, grid=grid8)
+    else:
+        bits = B.entropy_bits(q, masks["bm8"], masks["n8"], grid=grid8)
+        q = jnp.where(masks["bm8"][:, None, None], q, 0.0)
     rec = B.unblockify(B.idct2(B.dequantize(q, qtab)),
                        *frame.shape) + 128.0
     return jnp.clip(rec, 0.0, 255.0), q, bits
 
 
-def _encode_pframe(frame, ref_recon, qtab, cfg: VideoCodecConfig):
+def _encode_pframe(frame, ref_recon, qtab, cfg: VideoCodecConfig,
+                   masks=None):
     mv, _ = M.block_sad(frame, ref_recon, cfg.search_radius,
                         use_kernel=cfg.use_kernel, dtype=cfg.search_dtype)
+    if masks is not None:
+        mv = jnp.where(masks["mb"][..., None], mv, 0)
     pred = M.warp_blocks(ref_recon, mv)
     resid = frame.astype(f32) - pred
+    grid8 = (frame.shape[0] // 8, frame.shape[1] // 8)
     blocks = B.blockify(resid)
     q = B.quantize_with_table(B.dct2(blocks), qtab)
-    bits = B.entropy_bits(q) + mv.size * 3.0        # MV coding cost proxy
+    if masks is None:
+        bits = B.entropy_bits(q, grid=grid8) \
+            + mv.size * 3.0                         # MV coding cost proxy
+    else:
+        bits = B.entropy_bits(q, masks["bm8"], masks["n8"], grid=grid8) \
+            + masks["nmb"].astype(f32) * 6.0        # 2 components x 3 bits
+        q = jnp.where(masks["bm8"][:, None, None], q, 0.0)
     rec_resid = B.unblockify(B.idct2(B.dequantize(q, qtab)), *frame.shape)
     rec = jnp.clip(pred + rec_resid, 0.0, 255.0)
-    return rec, mv, q, bits, jnp.mean(jnp.abs(resid))
+    return rec, mv, q, bits, _mean_abs(resid, masks)
 
 
-def _encode_chunk(frames, cfg: VideoCodecConfig) -> EncodedChunk:
+def _encode_chunk(frames, cfg: VideoCodecConfig, extent=None,
+                  quality=None) -> EncodedChunk:
     """Traced body shared by ``encode_chunk`` (one stream) and
-    ``encode_chunk_batched`` (vmap over streams)."""
+    ``encode_chunk_batched`` (vmap over streams).
+
+    ``extent`` ((h, w), traced int scalars) activates the masked
+    heterogeneous-ladder form: ``frames`` is a zero/garbage-padded
+    (T, Hp, Wp) canvas whose valid region is (h, w); the encode then
+    reproduces the unpadded (h, w) encode bit-for-bit on the valid
+    extent (padded MVs/coefficients are zeroed, padded recon is
+    edge-replicated).  ``quality`` (traced f32) overrides ``cfg.quality``
+    so one dispatch can serve per-stream QPs."""
     T, H, W = frames.shape
     nby, nbx = H // M.MB, W // M.MB
-    qtab = B.quant_table(cfg.quality)        # once per chunk, threaded
-    rec0, q0, bits0 = _encode_iframe(frames[0], qtab)
+    qtab = B.quant_table(cfg.quality if quality is None else quality)
+    if extent is None:
+        masks = None
+    else:
+        h, w = extent
+        masks = _extent_masks(H, W, h, w)
+        # normalize whatever padding the caller shipped: the margin must
+        # be edge-replicated for the window-content equivalence to hold
+        frames = jax.vmap(lambda f: _edge_extend(f, h, w))(frames)
+    rec0, q0, bits0 = _encode_iframe(frames[0], qtab, masks)
+    if masks is not None:
+        # the padded margin's recon is NOT the replication of the valid
+        # recon (it is the quantized round trip of the replicated input);
+        # re-extend so P-frame search windows match the unpadded encode
+        rec0 = _edge_extend(rec0, masks["h"], masks["w"])
 
     def step(carry, frame):
         prev_rec = carry
-        rec, mv, q, bits, rmag = _encode_pframe(frame, prev_rec, qtab, cfg)
-        fdiff = jnp.mean(jnp.abs(frame - prev_rec))
+        rec, mv, q, bits, rmag = _encode_pframe(frame, prev_rec, qtab, cfg,
+                                                masks)
+        fdiff = _mean_abs(frame - prev_rec, masks)
+        if masks is not None:
+            rec = _edge_extend(rec, masks["h"], masks["w"])
         return rec, (rec, mv, q, bits, rmag, fdiff)
 
     _, (recs, mvs, qs, bits, rmags, fdiffs) = lax.scan(
@@ -104,7 +212,7 @@ def _encode_chunk(frames, cfg: VideoCodecConfig) -> EncodedChunk:
     mv = jnp.concatenate([jnp.zeros((1, nby, nbx, 2), jnp.int32), mvs], axis=0)
     residual_q = jnp.concatenate([q0[None], qs], axis=0)
     all_bits = jnp.concatenate([bits0[None], bits], axis=0)
-    rmag0 = jnp.mean(jnp.abs(frames[0].astype(f32) - 128.0))
+    rmag0 = _mean_abs(frames[0].astype(f32) - 128.0, masks)
     residual_mag = jnp.concatenate([rmag0[None], rmags], axis=0)
     frame_diff = jnp.concatenate([jnp.zeros((1,), f32), fdiffs], axis=0)
     return EncodedChunk(recon=recon, mv=mv, residual_q=residual_q,
@@ -141,6 +249,51 @@ def encode_chunk_batched(frames, cfg: VideoCodecConfig) -> EncodedChunk:
     zero-padding for non-divisible stream counts.
     """
     return _encode_batch(frames, cfg)
+
+
+def _encode_ladder_batch(frames, extents, qualities,
+                         cfg: VideoCodecConfig) -> EncodedChunk:
+    """vmap-over-streams traced body of the heterogeneous-ladder encode:
+    frames (S, T, Hp, Wp) padded canvases, extents (S, 2) int32 valid
+    (h, w) per stream, qualities (S,) f32 per-stream QP.  Shared by
+    ``encode_chunk_ladder_batched`` and the mesh-sharded round-trip
+    (``repro.distributed.stream_sharding.shard_roundtrip``)."""
+    return jax.vmap(
+        lambda f, e, q: _encode_chunk(f, cfg, extent=(e[0], e[1]),
+                                      quality=q))(frames, extents, qualities)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def encode_chunk_ladder_batched(frames, extents, qualities,
+                                cfg: VideoCodecConfig) -> EncodedChunk:
+    """One padded device dispatch encodes S streams of MIXED ladder rungs.
+
+    frames: (S, T, Hp, Wp) — each stream's LR chunk zero-padded to the
+    common canvas (see ``pad_ladder_batch``); extents: (S, 2) int32 valid
+    (h, w); qualities: (S,) f32 per-stream quantizer quality.  Lane s is
+    bit-exact (f32) vs ``encode_chunk`` on stream s's unpadded frames over
+    the valid extent; padded MVs/coefficients are zero and the padded
+    recon margin is edge-replicated.  ``cfg.quality`` is ignored (the
+    per-stream array wins); ``use_kernel``/``dtype`` apply to all lanes.
+    """
+    return _encode_ladder_batch(frames, extents, qualities, cfg)
+
+
+def pad_ladder_batch(chunks):
+    """Host helper: stack mixed-shape LR chunks onto one padded canvas.
+
+    chunks: sequence of (T, h_s, w_s) arrays (same T, heterogeneous
+    ladder shapes).  Returns (frames (S, T, Hp, Wp), extents (S, 2) int32)
+    for ``encode_chunk_ladder_batched``.  Padding content is irrelevant —
+    the masked encode re-edge-replicates the margin in-trace."""
+    Hp = max(c.shape[1] for c in chunks)
+    Wp = max(c.shape[2] for c in chunks)
+    frames = jnp.stack([
+        jnp.pad(jnp.asarray(c, f32),
+                ((0, 0), (0, Hp - c.shape[1]), (0, Wp - c.shape[2])))
+        for c in chunks])
+    extents = jnp.asarray([c.shape[1:] for c in chunks], jnp.int32)
+    return frames, extents
 
 
 def decode_chunk(enc: EncodedChunk):

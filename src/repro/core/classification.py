@@ -14,7 +14,6 @@ sequential scan (exactly as the decoder replays it).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

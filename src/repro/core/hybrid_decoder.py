@@ -30,7 +30,6 @@ from jax import lax
 
 from repro.codec.rate_model import upscale_nearest
 from repro.core.hybrid_encoder import HybridPacket
-from repro.core.quality_transfer import transfer_chunk
 from repro.core.reuse import reuse_chunk
 from repro.models import detection as D
 
@@ -153,18 +152,25 @@ def anchor_index(types):
 
 def _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
                    detector_params, det_cfg, bw_kbps, queue_delay,
-                   total_bits, costs: PipelineCosts):
+                   total_bits, costs: PipelineCosts, lr_extent=None):
     """Traced body shared by ``decode_execute_chunk`` (single stream) and
     ``decode_execute_batched`` (vmap over streams).  Pure jnp: no host
-    transfers, no Python loops over frames."""
+    transfers, no Python loops over frames.
+
+    ``lr_extent`` ((h, w), traced ints) is the valid LR extent when
+    ``enc`` came out of the heterogeneous-ladder padded encode: the
+    upscale/MV index maps then read only the valid region of the padded
+    canvas, making the result bit-identical to decoding the stream's
+    unpadded encode (the fused round-trip relies on this)."""
     H, W = anchor_hd.shape[1:]
 
-    lr_up = upscale_nearest(enc.recon, H, W)
+    lr_up = upscale_nearest(enc.recon, H, W, src_hw=lr_extent)
     aidx = anchor_index(types)
     anchor_plane = anchor_hd[aidx]
-    mvs_hd = _upscale_mvs(enc.mv, (H, W))
+    mvs_hd = _upscale_mvs(enc.mv, (H, W), lr_hw=lr_extent)
 
-    residual_up = jax.vmap(lambda r: upscale_nearest(r[None], H, W)[0])(
+    residual_up = jax.vmap(
+        lambda r: upscale_nearest(r[None], H, W, src_hw=lr_extent)[0])(
         _residual_px(enc))
     frames_exec = jnp.where((types == 1)[:, None, None], anchor_hd, lr_up)
     qt = _transfer(anchor_plane, aidx, mvs_hd, residual_up, frames_exec,
@@ -255,23 +261,30 @@ def decode_and_execute_fused(packet: HybridPacket, detector_params, det_cfg,
 
 def _residual_px(enc):
     from repro.core.quality_transfer import residual_to_pixels
-    T = enc.recon.shape[0]
     h, w = enc.recon.shape[1:]
     return jax.vmap(lambda q: residual_to_pixels(q, enc.qtab, h, w))(
         enc.residual_q)
 
 
-def _upscale_mvs(mv, hw):
-    """LR MVs -> HD block grid + magnitude rescale (Fig. 7 step 2)."""
+def _upscale_mvs(mv, hw, lr_hw=None):
+    """LR MVs -> HD block grid + magnitude rescale (Fig. 7 step 2).
+
+    ``lr_hw`` ((h, w), traced ints) overrides the LR extent when ``mv``
+    carries padded macroblock rows/cols from the heterogeneous-ladder
+    encode.  The scale factors are computed with f32 jnp ops in BOTH
+    forms (constant-folded when static) so the padded path stays
+    bit-identical to the unpadded one."""
     H, W = hw
     nby, nbx = H // 16, W // 16
-    T, nby_lr, nbx_lr, _ = mv.shape
+    T, nby_p, nbx_p, _ = mv.shape
+    nby_lr, nbx_lr = (nby_p, nbx_p) if lr_hw is None \
+        else (lr_hw[0] // 16, lr_hw[1] // 16)
     yi = jnp.clip(jnp.arange(nby) * nby_lr // nby, 0, nby_lr - 1)
     xi = jnp.clip(jnp.arange(nbx) * nbx_lr // nbx, 0, nbx_lr - 1)
     mvu = mv[:, yi][:, :, xi].astype(f32)
-    sy = H / (nby_lr * 16.0)
-    sx = W / (nbx_lr * 16.0)
-    return jnp.round(mvu * jnp.array([sy, sx], f32)).astype(jnp.int32)
+    sy = jnp.asarray(H, f32) / (jnp.asarray(nby_lr, f32) * 16.0)
+    sx = jnp.asarray(W, f32) / (jnp.asarray(nbx_lr, f32) * 16.0)
+    return jnp.round(mvu * jnp.stack([sy, sx])).astype(jnp.int32)
 
 
 def _transfer(anchor_plane, anchor_idx, mvs_hd, residual_up, frames, types):

@@ -15,16 +15,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.codec import blockdct
 from repro.codec.image_codec import jpeg_encode_decode, jpeg_bits
 from repro.codec.rate_model import (QUALITY_LADDER, downscale,
-                                    ladder_for_bandwidth, upscale_nearest)
+                                    ladder_for_bandwidth,
+                                    video_bandwidth_share)
 from repro.codec.video_codec import VideoCodecConfig, encode_chunk
 from repro.core.classification import classify_frames
 
 f32 = jnp.float32
 
 ANCHOR_QUALITIES = (25.0, 40.0, 55.0, 70.0, 85.0)
+
+# module-level jits: re-wrapping per encode_hybrid call would retrace the
+# JPEG paths on every chunk (the same re-wrap defect PR 3 fixed for
+# encode_chunk call sites)
+_jpeg_bits = jax.jit(jpeg_bits)
+_jpeg = jax.jit(jpeg_encode_decode)
 
 
 @dataclasses.dataclass
@@ -67,7 +73,7 @@ def encode_hybrid(raw_frames, bw_kbps: float, tr1: float, tr2: float,
     budget_bits = bw_kbps * 1000.0 * (T / fps)
 
     # 1) ladder selection with headroom reserved for anchors (~35%)
-    level = ladder_for_bandwidth(bw_kbps * 0.65)
+    level = ladder_for_bandwidth(video_bandwidth_share(bw_kbps))
     ql = QUALITY_LADDER[level]
     frames_lr = downscale(raw_frames, ql.scale)
     cfg = VideoCodecConfig(quality=ql.quality)
@@ -90,15 +96,14 @@ def encode_hybrid(raw_frames, bw_kbps: float, tr1: float, tr2: float,
     per_anchor = anchor_budget / max(len(anchor_ids), 1)
     quality = ANCHOR_QUALITIES[0]
     for q in ANCHOR_QUALITIES:
-        bits = float(jax.jit(jpeg_bits)(raw_frames[anchor_ids[0]], q)) \
+        bits = float(_jpeg_bits(raw_frames[anchor_ids[0]], q)) \
             if len(anchor_ids) else 0.0
         if bits <= per_anchor:
             quality = q
     anchor_hd = np.zeros((T, H, W), np.float32)
     anchor_bits = 0.0
-    jpeg = jax.jit(jpeg_encode_decode)
     for i in anchor_ids:
-        rec, bits = jpeg(raw_frames[i], quality)
+        rec, bits = _jpeg(raw_frames[i], quality)
         anchor_hd[i] = np.asarray(rec)
         anchor_bits += float(bits)
 

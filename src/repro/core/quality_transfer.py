@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.codec import blockdct as B
-from repro.codec.motion import warp_blocks, accumulate_mv, MB
+from repro.codec.motion import warp_blocks
 
 f32 = jnp.float32
 

@@ -25,6 +25,15 @@ parity for divisible and non-divisible stream counts.
 independent on the encode path), so camera-side chunk encoding scales over
 the same "stream" mesh axes as edge-side execution
 (``tests/test_fused_encoder.py`` holds its parity matrix).
+
+``shard_roundtrip(mesh, rules, cfg=...)`` shards the WHOLE fused
+encode->decode round trip (``repro.core.roundtrip``): each device runs
+source-frames->HD-detections for its local slice of streams in one
+program.  Mixed bitrate-ladder rungs are legal — the shard_map body is the
+post-downscale heterogeneous form, so per-stream extents/QPs travel as
+data while the shape-changing per-rung downscale stays outside the
+region.  Padded stream lanes carry FULL-canvas extents (not zeros) so
+their masked means never divide by zero.
 """
 from __future__ import annotations
 
@@ -104,6 +113,66 @@ def shard_encode(mesh: Mesh, rules: AxisRules, *, cfg):
         s = frames.shape[0]
         (padded,) = pad_stream_axis((frames,), n_shards)
         out = sharded(padded)
+        return jax.tree.map(lambda x: x[:s], out)
+
+    return run
+
+
+def shard_roundtrip(mesh: Mesh, rules: AxisRules, *, cfg):
+    """Build the mesh-sharded twin of ``roundtrip_batched`` /
+    ``roundtrip_ladder_batched``.
+
+    Returns ``run(raw, gt_boxes, gt_valid, detector_params, *, tr1, tr2,
+    bw_kbps, queue_delay, levels=None)`` where raw is (S, T, H, W) source
+    frames and the keyword scalars broadcast to (S,).  ``levels`` (host
+    tuple, one ladder rung per stream) defaults to ``cfg.level`` for all
+    streams; mixed rungs run through the padded heterogeneous encode, so
+    one shard_map region serves the whole mixed-ladder stream set.  The
+    stream axis is zero-padded to the mesh's stream extent; padded lanes
+    get full-canvas extents (a zero extent would poison the masked means
+    with 0/0) and are dropped on exit.  ``cfg`` (``RoundtripConfig``) is
+    bound at build time — it is a static jit argument."""
+    from repro.core.roundtrip import (_downscale_pad, _roundtrip_ladder_body,
+                                      ladder_batch_arrays)
+
+    spec = stream_partition_spec(mesh, rules)
+    n_shards = stream_shard_count(mesh, rules)
+
+    def body(raw, lr_pad, extents, qualities, gb, gv, params, t1, t2,
+             bw, qd):
+        return _roundtrip_ladder_body(raw, lr_pad, extents, qualities, gb,
+                                      gv, params, t1, t2, bw, qd, cfg)
+
+    sharded = jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec, spec, P(), spec, spec,
+                  spec, spec),
+        out_specs=spec,
+    ))
+
+    def run(raw, gt_boxes, gt_valid, detector_params, *, tr1, tr2, bw_kbps,
+            queue_delay=0.0, levels=None):
+        raw = jnp.asarray(raw, f32)
+        s = raw.shape[0]
+        levels = tuple(levels) if levels is not None else (cfg.level,) * s
+        lr_pad = _downscale_pad(raw, levels)
+        extents, qualities = ladder_batch_arrays(levels, *raw.shape[2:])
+        streamed = (raw, lr_pad, gt_boxes, gt_valid,
+                    jnp.broadcast_to(jnp.asarray(tr1, f32), (s,)),
+                    jnp.broadcast_to(jnp.asarray(tr2, f32), (s,)),
+                    jnp.broadcast_to(jnp.asarray(bw_kbps, f32), (s,)),
+                    jnp.broadcast_to(jnp.asarray(queue_delay, f32), (s,)))
+        r, lp, gb, gv, t1, t2, bw, qd = pad_stream_axis(streamed, n_shards)
+        pad = r.shape[0] - s
+        if pad:
+            # padded lanes: full canvas extent, nominal quality
+            extents = jnp.concatenate(
+                [extents, jnp.tile(jnp.asarray(lp.shape[2:], jnp.int32),
+                                   (pad, 1))])
+            qualities = jnp.concatenate([qualities, jnp.full((pad,), 50.0,
+                                                             f32)])
+        out = sharded(r, lp, extents, qualities, gb, gv, detector_params,
+                      t1, t2, bw, qd)
         return jax.tree.map(lambda x: x[:s], out)
 
     return run

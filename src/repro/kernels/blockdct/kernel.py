@@ -10,7 +10,6 @@ TILE = 256.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,7 @@ smoke tests; callers use the *reduced* configs there.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -189,9 +188,6 @@ def make_train_fn(arch: ArchSpec, grad_accum: int = 1):
         return train_step
 
     def train_step(state, batch):
-        variables = {"params": state["params"],
-                     "batch_stats": state["batch_stats"]}
-
         def inner(p):
             loss, new_st = lf({"params": p,
                                "batch_stats": state["batch_stats"]}, batch)

@@ -10,8 +10,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch, ShapeCase
 from repro.launch.steps import build_cell, materialize

@@ -12,7 +12,6 @@ Layers are stacked (L, ...) and scanned; remat is applied per layer.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import jax
@@ -20,7 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models import layers as L
-from repro.models.params import ParamSpec, spec
+from repro.models.params import spec
 
 f32 = jnp.float32
 
@@ -286,7 +285,6 @@ def decode_step(params, cfg: LMConfig, cache, tokens, pos):
 
     Returns (logits (B, 1, V), new_cache).
     """
-    B = tokens.shape[0]
     Sc = cache["k"].shape[2]
     positions = jnp.reshape(jnp.asarray(pos, jnp.int32), (1,))
     x = params["embed"].at[tokens].get(mode="clip").astype(cfg.dtype)

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.params import spec, init_params
+from repro.models.params import spec
 
 f32 = jnp.float32
 

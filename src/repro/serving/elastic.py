@@ -8,13 +8,11 @@ logic with host-platform fake devices in tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import numpy as np
 
 from repro.distributed.sharding import make_axis_rules
-from repro.models.params import abstract_params
 
 
 @dataclasses.dataclass

@@ -8,7 +8,6 @@ of the paper's Fig. 4 right half; benchmarks/throughput.py drives it with
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import numpy as np
 import jax

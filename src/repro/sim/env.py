@@ -10,22 +10,24 @@ Two accuracy backends:
   * ``analytic``  — calibrated F1 model (paper Fig. 3d / Fig. 10 shape:
     small objects degrade sharply with resolution; reuse decays with
     motion).  Fast: used for DRL training loops and unit tests.
-  * ``detector``  — the real TinyDetector + full codec path end-to-end.
+  * ``detector``  — the real TinyDetector + full codec path end-to-end,
+    dispatched through the fused encode->decode round-trip jit
+    (``repro.core.roundtrip``): one device dispatch per
+    (batch-signature, ladder-rung) stream group, source frames to HD
+    detections without leaving the trace.
 Both expose the same observation/reward interface (paper §V states).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.codec.rate_model import QUALITY_LADDER
-from repro.core.classification import classify_frames, pipeline_fractions
-from repro.rl.a2c import A2CConfig, reward as low_reward
+from repro.core.classification import classify_frames
 from repro.sim.network import TraceConfig, allocate, generate_trace
-from repro.sim.video_source import StreamConfig, generate_chunk_batched
+from repro.sim.video_source import generate_chunk_batched, group_by_signature
 
 f32 = np.float32
 
@@ -45,6 +47,10 @@ class EnvConfig:
     # map round-robin to shards, each owning gpu_capacity_fps / n_shards;
     # queue delay is per-shard, so a hot shard only slows ITS streams
     n_shards: int = 1
+    # detector backend: anchor JPEG quality pinned into the fused
+    # round-trip jit (static — the legacy host encoder searched it per
+    # chunk, which is a data-dependent decision the single trace avoids)
+    anchor_quality: float = 70.0
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +125,7 @@ class MultiStreamEnv:
         self.detector = detector
         self._rng = np.random.default_rng(cfg.seed)
         self._chunk_cache = {}
+        self._rt_cfg = None         # lazy RoundtripConfig (rungs are data)
 
     @property
     def queues(self) -> np.ndarray:
@@ -136,9 +143,7 @@ class MultiStreamEnv:
         per-stream ``generate_chunk`` (same seed-derived params)."""
         if self._chunk_cache.get("t") != self.t:
             t0 = self.t * self.cfg.chunk_frames
-            groups: dict = {}
-            for c, sc in enumerate(self.cfg.streams):
-                groups.setdefault(sc.batch_signature, []).append(c)
+            groups = group_by_signature(self.cfg.streams)
             data = {}
             for ids in groups.values():
                 fr, bx, vd = generate_chunk_batched(
@@ -196,15 +201,15 @@ class MultiStreamEnv:
         cfg = self.cfg
         total_bw = self.total_bandwidth()
         alloc = allocate(total_bw, proportions)
-        results = []
-        infer_frames_total = 0
-        for c in range(self.C):
-            frames, boxes, valid = self._chunk(c)
-            tr1, tr2 = float(thresholds[c, 0]), float(thresholds[c, 1])
-            out = self._run_stream(c, frames, boxes, valid, alloc[c],
-                                   tr1, tr2)
-            infer_frames_total += out["n_infer"]
-            results.append(out)
+        if cfg.accuracy_backend == "detector" and self.detector is not None:
+            results = self._run_streams_roundtrip(alloc, thresholds)
+        else:
+            results = []
+            for c in range(self.C):
+                frames, boxes, valid = self._chunk(c)
+                tr1, tr2 = float(thresholds[c, 0]), float(thresholds[c, 1])
+                results.append(self._run_stream(c, frames, boxes, valid,
+                                                alloc[c], tr1, tr2))
 
         # edge GPU queue dynamics, per mesh shard: each shard serves its
         # own slice of capacity, and a stream's queueing delay comes from
@@ -245,9 +250,6 @@ class MultiStreamEnv:
     def _run_stream(self, c, frames, boxes, valid, bw_kbps, tr1, tr2):
         cfg = self.cfg
         sc = cfg.streams[c]
-        if cfg.accuracy_backend == "detector" and self.detector is not None:
-            return self._run_stream_full(c, frames, boxes, valid, bw_kbps,
-                                         tr1, tr2)
         # ---- analytic fast path: classification from raw frame features
         fd = np.abs(np.diff(frames, axis=0)).mean(axis=(1, 2)) / 255.0
         fd = np.concatenate([[0.0], fd])
@@ -298,23 +300,81 @@ class MultiStreamEnv:
                 "utilization": min(bits / max(bw_kbps * 1000.0 * chunk_s,
                                               1e-6), 1.0)}
 
-    def _run_stream_full(self, c, frames, boxes, valid, bw_kbps, tr1, tr2):
-        from repro.core.hybrid_encoder import encode_hybrid
-        from repro.core.hybrid_decoder import decode_and_execute_fused
-        det_params, det_cfg = self.detector
-        packet = encode_hybrid(frames, bw_kbps, tr1, tr2, fps=self.cfg.fps)
-        res = decode_and_execute_fused(packet, det_params, det_cfg, boxes,
-                                       valid, bw_kbps=bw_kbps)
-        types = packet.types
-        chunk_s = self.cfg.chunk_frames / self.cfg.fps
-        return {"stream": c, "accuracy": res.mean_f1,
-                "latency": res.latency, "t_trans": res.t_trans,
-                "t_comp": res.t_comp, "bits": packet.total_bits,
-                "types": types,
-                "n_anchor": int((types == 1).sum()),
-                "n_transfer": int((types == 2).sum()),
-                "n_infer": int((types != 3).sum()),
-                "bw_kbps": float(bw_kbps),
-                "utilization": min(packet.total_bits /
-                                   max(bw_kbps * 1000.0 * chunk_s, 1e-6),
-                                   1.0)}
+    def _roundtrip_cfg(self):
+        """The env's RoundtripConfig (static jit argument; rungs travel
+        as data through the shape-stable entry, so one config serves all
+        ladder levels)."""
+        if self._rt_cfg is None:
+            from repro.core.roundtrip import RoundtripConfig
+            _, det_cfg = self.detector
+            self._rt_cfg = RoundtripConfig(
+                det_cfg=det_cfg, anchor_quality=self.cfg.anchor_quality,
+                fps=self.cfg.fps)
+        return self._rt_cfg
+
+    def _run_streams_roundtrip(self, alloc, thresholds) -> list:
+        """Detector backend: ONE fused round-trip dispatch per
+        batch-signature group — source frames to HD detections without
+        leaving the trace (``repro.core.roundtrip``), instead of the
+        legacy per-stream encode_hybrid + decode_and_execute_fused host
+        loop.  Each stream's ladder rung rides along as DATA
+        (``roundtrip_padded_batched``: eager per-rung downscale, fixed
+        full-size LR canvas, per-stream extents/QPs), so per-step
+        bandwidth reallocation never retraces — compile churn is bounded
+        at one trace per signature, not per (rung-combination, size).
+        """
+        from repro.codec.rate_model import (QUALITY_LADDER, downscale,
+                                            ladder_for_bandwidth,
+                                            video_bandwidth_share)
+        from repro.core.roundtrip import (full_lr_canvas,
+                                          ladder_batch_arrays,
+                                          roundtrip_padded_batched)
+        det_params, _ = self.detector
+        cfg = self.cfg
+        chunks = self._chunks_for_step()
+        # encode_hybrid's ladder selection: anchor headroom comes off first
+        level = {c: ladder_for_bandwidth(video_bandwidth_share(alloc[c]))
+                 for c in range(self.C)}
+
+        chunk_s = cfg.chunk_frames / cfg.fps
+        results = [None] * self.C
+        for sig, ids in group_by_signature(cfg.streams).items():
+            H, W = sig[0], sig[1]
+            hp, wp = full_lr_canvas(H, W)
+            extents, quals = ladder_batch_arrays(
+                [level[c] for c in ids], H, W)
+            lr_pad = []
+            for i, c in enumerate(ids):
+                lr = downscale(jnp.asarray(chunks[c][0], f32),
+                               QUALITY_LADDER[level[c]].scale)
+                h, w = int(extents[i, 0]), int(extents[i, 1])
+                lr_pad.append(jnp.pad(lr, ((0, 0), (0, hp - h),
+                                           (0, wp - w))))
+            raw = jnp.stack([jnp.asarray(chunks[c][0], f32) for c in ids])
+            gtb = jnp.stack([jnp.asarray(chunks[c][1]) for c in ids])
+            gtv = jnp.stack([jnp.asarray(chunks[c][2]) for c in ids])
+            out = roundtrip_padded_batched(
+                raw, jnp.stack(lr_pad), extents, quals, gtb, gtv,
+                det_params,
+                tr1=jnp.asarray([thresholds[c, 0] for c in ids], f32),
+                tr2=jnp.asarray([thresholds[c, 1] for c in ids], f32),
+                bw_kbps=jnp.asarray([alloc[c] for c in ids], f32),
+                queue_delay=jnp.zeros((len(ids),), f32),
+                cfg=self._roundtrip_cfg())
+            for i, c in enumerate(ids):
+                types = np.asarray(out["types"][i])
+                bits = float(out["total_bits"][i])
+                bw = float(alloc[c])
+                results[c] = {
+                    "stream": c, "accuracy": float(out["mean_f1"][i]),
+                    "latency": float(out["latency"][i]),
+                    "t_trans": float(out["t_trans"][i]),
+                    "t_comp": float(out["t_comp"][i]), "bits": bits,
+                    "types": types,
+                    "n_anchor": int((types == 1).sum()),
+                    "n_transfer": int((types == 2).sum()),
+                    "n_infer": int((types != 3).sum()),
+                    "bw_kbps": bw,
+                    "utilization": min(bits / max(bw * 1000.0 * chunk_s,
+                                                  1e-6), 1.0)}
+        return results

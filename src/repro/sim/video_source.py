@@ -141,6 +141,20 @@ def _render_batched(params, t0, n_frames: int, H: int, W: int):
     return jax.vmap(lambda p: _render_chunk(p, t0, n_frames, H, W))(params)
 
 
+def group_by_signature(cfgs) -> dict:
+    """Stream indices grouped by ``batch_signature`` (insertion-ordered).
+
+    The producer AND the fused round-trip dispatch batch per group: every
+    stream in a group shares one padded shape, so one vmapped device
+    dispatch serves the whole group (``repro.sim.env`` uses this for both
+    ``generate_chunk_batched`` renders and ``roundtrip_batched`` calls).
+    """
+    groups: dict = {}
+    for i, sc in enumerate(cfgs):
+        groups.setdefault(sc.batch_signature, []).append(i)
+    return groups
+
+
 def generate_chunk_batched(cfgs, t0: int, n_frames: int):
     """Render S shape-compatible streams in one vmapped jit.
 

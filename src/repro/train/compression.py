@@ -14,7 +14,6 @@ Both preserve the descent direction in expectation; see EXPERIMENTS.md
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

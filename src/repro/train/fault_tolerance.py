@@ -10,11 +10,9 @@ async checkpoint path bounds lost work to ``ckpt_every`` steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
-import jax
 
-from repro.train import checkpoint as CKPT
 from repro.train import loop as LOOP
 
 

@@ -10,7 +10,6 @@ import dataclasses
 import time
 from typing import Callable, Iterator, Optional
 
-import jax
 import numpy as np
 
 from repro.train import checkpoint as CKPT

@@ -6,7 +6,6 @@ logical axes), so optimizer state is ZeRO-sharded exactly like the params.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,13 +9,17 @@ encode) must reproduce bit-exactly in f32.
 
 Run from the repo root whenever the codec *intentionally* changes:
 
-    PYTHONPATH=src python tests/golden/generate_codec_golden.py
+    PYTHONPATH=src python tests/golden/generate_codec_golden.py --force
 
 and commit the refreshed .npz together with the change that motivated it.
+The ``--force`` flag is required to overwrite an existing fixture — a
+bare run refuses, so a stray invocation cannot silently re-baseline the
+regression net around an unintended codec drift.
 """
 from __future__ import annotations
 
 import os
+import sys
 
 import jax
 import numpy as np
@@ -76,7 +80,14 @@ def encode_with_scan_oracle(frames, cfg: VideoCodecConfig):
         M.block_sad = orig
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if os.path.exists(OUT) and "--force" not in argv:
+        sys.exit(
+            f"refusing to overwrite {OUT}: the golden fixture is the codec "
+            "regression baseline.  Re-run with --force ONLY for an "
+            "intentional codec change, and commit the refreshed .npz "
+            "together with the change that motivated it.")
     payload = {}
     for name, case in CASES.items():
         frames = golden_frames(case)

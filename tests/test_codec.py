@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.codec import blockdct as B
 from repro.codec.image_codec import jpeg_encode_decode, psnr
-from repro.codec.motion import MB, block_sad, warp_blocks
+from repro.codec.motion import block_sad, warp_blocks
 from repro.codec.rate_model import (QUALITY_LADDER, downscale,
                                     ladder_for_bandwidth, upscale_nearest)
 from repro.codec.video_codec import VideoCodecConfig, encode_chunk, \

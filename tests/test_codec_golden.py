@@ -15,7 +15,7 @@ path must reproduce those checksums:
     within 5 %, MV histograms within 10 % total-count L1 drift.
 
 Regenerate the fixture ONLY for intentional codec changes:
-``PYTHONPATH=src python tests/golden/generate_codec_golden.py``.
+``PYTHONPATH=src python tests/golden/generate_codec_golden.py --force``.
 """
 import os
 import sys
@@ -28,13 +28,19 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "golden"))
 from generate_codec_golden import (CASES, checksums, encode_with_scan_oracle,
-                                   golden_frames, mv_histograms)  # noqa: E402
+                                   golden_frames)  # noqa: E402
 from repro.codec.video_codec import (VideoCodecConfig, encode_chunk,
                                      encode_chunk_batched)  # noqa: E402
 
 GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "golden", "codec_golden.npz")
 GOLDEN = dict(np.load(GOLDEN_PATH))
+
+REGEN_HINT = (
+    "If (and ONLY if) this divergence is an intentional codec change, "
+    "regenerate the fixture with:\n"
+    "    PYTHONPATH=src python tests/golden/generate_codec_golden.py --force\n"
+    "and commit the refreshed .npz together with the change.")
 
 
 def _case_cfg(case, **overrides):
@@ -46,20 +52,24 @@ def _assert_bit_exact(name, got: dict):
     for key, val in got.items():
         np.testing.assert_array_equal(
             val, GOLDEN[f"{name}_{key}"],
-            err_msg=f"{name}_{key} diverged from the scan-oracle golden")
+            err_msg=(f"{name}_{key} diverged from the scan-oracle golden.\n"
+                     f"{REGEN_HINT}"))
 
 
 def _assert_bf16_tolerance(name, got: dict):
     g = {k: GOLDEN[f"{name}_{k}"] for k in got}
-    np.testing.assert_allclose(got["psnr"], g["psnr"], atol=1.0)
-    np.testing.assert_allclose(got["bits"], g["bits"], rtol=0.05)
+    np.testing.assert_allclose(got["psnr"], g["psnr"], atol=1.0,
+                               err_msg=REGEN_HINT)
+    np.testing.assert_allclose(got["bits"], g["bits"], rtol=0.05,
+                               err_msg=REGEN_HINT)
     np.testing.assert_allclose(got["residual_mag"], g["residual_mag"],
-                               rtol=0.05)
-    np.testing.assert_array_equal(got["qtab"], g["qtab"])
+                               rtol=0.05, err_msg=REGEN_HINT)
+    np.testing.assert_array_equal(got["qtab"], g["qtab"],
+                                  err_msg=REGEN_HINT)
     total = g["mv_hist"].sum(axis=1, keepdims=True)
     l1 = np.abs(got["mv_hist"] - g["mv_hist"]).sum(axis=1)
     assert (l1 <= 0.1 * total[:, 0] + 1).all(), \
-        f"{name} bf16 MV histogram drifted more than 10%: L1={l1}"
+        f"{name} bf16 MV histogram drifted more than 10%: L1={l1}\n{REGEN_HINT}"
 
 
 @pytest.mark.parametrize("name", list(CASES))

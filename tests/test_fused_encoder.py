@@ -19,8 +19,11 @@ from hypothesis import given, settings, strategies as st
 import conftest
 from repro.codec.motion import (MB, accumulate_mv, block_sad, block_sad_scan,
                                 warp_blocks)
+from repro.codec.rate_model import QUALITY_LADDER, downscale, ladder_lr_shape
 from repro.codec.video_codec import (VideoCodecConfig, encode_chunk,
-                                     encode_chunk_batched)
+                                     encode_chunk_batched,
+                                     encode_chunk_ladder_batched,
+                                     pad_ladder_batch)
 from repro.distributed.sharding import SINGLE_POD_RULES, SINGLE_POD_RULES_DP
 from repro.distributed.stream_sharding import shard_encode, stream_shard_count
 from repro.sim.video_source import (StreamConfig, generate_chunk,
@@ -194,6 +197,106 @@ def test_shard_encode_single_device_matches_oracle():
     frames = _streams(3)
     run = shard_encode(mesh, SINGLE_POD_RULES, cfg=CFG)
     _assert_enc_equal(run(frames), encode_chunk_batched(frames, CFG))
+
+
+# --------------------------------------------- heterogeneous ladder batching
+def _mixed_ladder_lrs(levels=(4, 3, 2), H=96, W=160, T=4):
+    """Per-stream LR chunks at MIXED ladder rungs from one HD source shape
+    (the 1080p/720p/480p analogue at sim scale)."""
+    lrs, quals = [], []
+    for s, level in enumerate(levels):
+        raw, _, _ = generate_chunk(None, StreamConfig(
+            height=H, width=W, n_objects=3, seed=s), 0, T)
+        lrs.append(downscale(raw, QUALITY_LADDER[level].scale))
+        quals.append(QUALITY_LADDER[level].quality)
+        assert lrs[-1].shape[1:] == ladder_lr_shape(level, H, W)
+    return lrs, jnp.asarray(quals, jnp.float32)
+
+
+def _assert_ladder_lane_equal(lane, single, h, w, err=""):
+    """Valid-extent bit-exactness of one padded lane vs the unpadded
+    single-stream encode (padded blocks are zeroed / edge-replicated)."""
+    Hp, Wp = lane.recon.shape[1:]
+    np.testing.assert_array_equal(np.asarray(lane.recon[:, :h, :w]),
+                                  np.asarray(single.recon), err_msg=err)
+    np.testing.assert_array_equal(
+        np.asarray(lane.mv[:, :h // MB, :w // MB]), np.asarray(single.mv),
+        err_msg=err)
+    bm = ((np.arange(Hp // 8)[:, None] < h // 8)
+          & (np.arange(Wp // 8)[None, :] < w // 8)).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(lane.residual_q)[:, bm],
+                                  np.asarray(single.residual_q), err_msg=err)
+    for field in ("qtab", "bits", "residual_mag", "frame_diff"):
+        np.testing.assert_array_equal(np.asarray(getattr(lane, field)),
+                                      np.asarray(getattr(single, field)),
+                                      err_msg=f"{err}: {field}")
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["vmapped_fallback", "kernel"])
+def test_encode_ladder_batched_mixed_rungs_bit_exact(use_kernel):
+    """One padded dispatch over a 3-rung mixed batch is lane-for-lane
+    bit-exact vs sequentially encoding each stream unpadded at its own
+    rung — rate model (bits), codec features and recon included."""
+    lrs, quals = _mixed_ladder_lrs()
+    frames, extents = pad_ladder_batch(lrs)
+    cfg = VideoCodecConfig(quality=50.0, search_radius=4,
+                           use_kernel=use_kernel)
+    enc = encode_chunk_ladder_batched(frames, extents, quals, cfg)
+    for s, lr in enumerate(lrs):
+        single = encode_chunk(lr, VideoCodecConfig(
+            quality=float(quals[s]), search_radius=4, use_kernel=use_kernel))
+        lane = jax.tree.map(lambda x: x[s], enc)
+        _assert_ladder_lane_equal(lane, single, *lr.shape[1:],
+                                  err=f"mixed-rung lane {s}")
+
+
+def test_encode_ladder_batched_padding_content_irrelevant():
+    """Garbage in the padded margin must not leak into any output: the
+    masked encode re-edge-replicates the canvas in-trace."""
+    lrs, quals = _mixed_ladder_lrs(levels=(4, 2))
+    frames, extents = pad_ladder_batch(lrs)
+    noise = jax.random.uniform(jax.random.PRNGKey(9), frames.shape) * 255
+    h, w = lrs[1].shape[1:]
+    poisoned = frames.at[1, :, h:, :].set(noise[1, :, h:, :])
+    poisoned = poisoned.at[1, :, :, w:].set(noise[1, :, :, w:])
+    cfg = VideoCodecConfig(quality=50.0, search_radius=4)
+    a = encode_chunk_ladder_batched(frames, extents, quals, cfg)
+    b = encode_chunk_ladder_batched(poisoned, extents, quals, cfg)
+    _assert_enc_equal(a, b, err="padding content leaked into the encode")
+
+
+def test_encode_ladder_batched_full_extent_matches_batched():
+    """Uniform rungs through the ladder path == the homogeneous vmap
+    (full-extent masking is the identity transformation)."""
+    frames = _streams(3)
+    S = frames.shape[0]
+    extents = jnp.tile(jnp.asarray(frames.shape[2:], jnp.int32), (S, 1))
+    quals = jnp.full((S,), CFG.quality, jnp.float32)
+    enc = encode_chunk_ladder_batched(frames, extents, quals, CFG)
+    _assert_enc_equal(enc, encode_chunk_batched(frames, CFG),
+                      err="full-extent ladder encode diverged from vmap")
+
+
+def test_encode_ladder_batched_padded_outputs_deterministic():
+    """Padded MVs/coefficients are zero and the padded recon margin is the
+    edge replication of the valid region — downstream consumers can rely
+    on the canvas contract."""
+    lrs, quals = _mixed_ladder_lrs(levels=(4, 2))
+    frames, extents = pad_ladder_batch(lrs)
+    enc = encode_chunk_ladder_batched(
+        frames, extents, quals, VideoCodecConfig(quality=50.0,
+                                                 search_radius=4))
+    h, w = lrs[1].shape[1:]
+    mv = np.asarray(enc.mv[1])
+    assert (mv[:, h // MB:, :] == 0).all() and (mv[:, :, w // MB:] == 0).all()
+    recon = np.asarray(enc.recon[1])
+    np.testing.assert_array_equal(recon[:, h:, :],
+                                  np.broadcast_to(recon[:, h - 1:h, :],
+                                                  recon[:, h:, :].shape))
+    np.testing.assert_array_equal(recon[:, :, w:],
+                                  np.broadcast_to(recon[:, :, w - 1:w],
+                                                  recon[:, :, w:].shape))
 
 
 # ------------------------------------------------------------ bf16 variants

@@ -1,0 +1,292 @@
+"""Fused encode->decode round-trip (ISSUE 4 tentpole): bit-exactness of
+``roundtrip_chunk`` / ``roundtrip_batched`` / ``roundtrip_ladder_batched``
+/ ``shard_roundtrip`` against the compose-the-two-jits oracle, the sim
+env's grouped dispatch, and internal consistency of the traced rate model.
+
+Like ``test_stream_sharding.py``, the mesh-parity matrix needs a real
+multi-device platform: a driver test re-runs this file's ``forced``-named
+tests in a subprocess with 4 fake CPU devices
+(``conftest.forced_multidevice_run``).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import conftest
+from repro.core.roundtrip import (RoundtripConfig, roundtrip_batched,
+                                  roundtrip_chunk, roundtrip_ladder_batched,
+                                  roundtrip_oracle)
+from repro.distributed.sharding import SINGLE_POD_RULES, SINGLE_POD_RULES_DP
+from repro.distributed.stream_sharding import (shard_roundtrip,
+                                               stream_shard_count)
+from repro.models import detection as D
+from repro.sim.video_source import StreamConfig, generate_chunk
+
+_FORCED = int(os.environ.get(conftest.FORCED_MULTIDEVICE_ENV, "0"))
+
+forced_only = pytest.mark.skipif(
+    _FORCED < 4, reason="needs the forced multi-device child process")
+
+H, W, T = 64, 96, 4
+MIXED_LEVELS = (4, 3, 2)        # full / 2-3 scale / half rung in one batch
+
+
+@pytest.fixture(scope="module")
+def det():
+    cfg = D.TinyDetectorConfig()
+    return D.init(jax.random.PRNGKey(1), cfg), cfg
+
+
+@pytest.fixture(scope="module")
+def cfg(det):
+    return RoundtripConfig(level=3, det_cfg=det[1])
+
+
+def _streams(S):
+    data = [generate_chunk(None, StreamConfig(height=H, width=W,
+                                              n_objects=3, seed=s), 0, T)
+            for s in range(S)]
+    return (jnp.stack([d[0] for d in data]),
+            jnp.stack([d[1] for d in data]),
+            jnp.stack([d[2] for d in data]))
+
+
+def _scalars(S):
+    return dict(tr1=jnp.full((S,), 0.05), tr2=jnp.full((S,), 0.1),
+                bw_kbps=jnp.asarray([6000.0, 3000.0, 1500.0, 8000.0,
+                                     2000.0, 900.0, 4000.0, 700.0][:S]),
+                queue_delay=jnp.zeros((S,)))
+
+
+def _assert_lane_equal(lane: dict, ref: dict, label: str):
+    assert set(lane) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(lane[k]), np.asarray(ref[k]),
+            err_msg=f"{label}: key {k!r} diverged from the two-jit oracle")
+
+
+def _oracle_lane(raw, gtb, gtv, params, sc: dict, s: int, cfg):
+    return roundtrip_oracle(
+        raw[s], gtb[s], gtv[s], params, tr1=float(sc["tr1"][s]),
+        tr2=float(sc["tr2"][s]), bw_kbps=float(sc["bw_kbps"][s]),
+        queue_delay=float(sc["queue_delay"][s]), cfg=cfg)
+
+
+# ------------------------------------------------- single-stream round trip
+def test_roundtrip_chunk_matches_oracle(det, cfg):
+    params, _ = det
+    raw, gtb, gtv = _streams(1)
+    sc = _scalars(1)
+    fused = roundtrip_chunk(raw[0], gtb[0], gtv[0], params, tr1=0.05,
+                            tr2=0.1, bw_kbps=6000.0, cfg=cfg)
+    oracle = _oracle_lane(raw, gtb, gtv, params, sc, 0, cfg)
+    _assert_lane_equal(fused, oracle, "roundtrip_chunk")
+
+
+def test_roundtrip_chunk_is_one_jit_boundary(det, cfg):
+    params, _ = det
+    assert hasattr(roundtrip_chunk, "lower")
+    raw, gtb, gtv = _streams(1)
+    out = roundtrip_chunk(raw[0], gtb[0], gtv[0], params, tr1=0.05,
+                          tr2=0.1, bw_kbps=6000.0, cfg=cfg)
+    assert all(isinstance(v, jax.Array) for v in out.values())
+
+
+def test_roundtrip_rate_model_consistency(det, cfg):
+    """total_bits = video + anchor; latency = trans + queue + compute; the
+    chunk I-frame is always an anchor so anchor bits are never zero."""
+    params, _ = det
+    raw, gtb, gtv = _streams(1)
+    out = roundtrip_chunk(raw[0], gtb[0], gtv[0], params, tr1=0.05,
+                          tr2=0.1, bw_kbps=6000.0, queue_delay=0.02,
+                          cfg=cfg)
+    assert float(out["total_bits"]) == pytest.approx(
+        float(out["video_bits"]) + float(out["anchor_bits"]))
+    assert float(out["latency"]) == pytest.approx(
+        float(out["t_trans"]) + 0.02 + float(out["t_comp"]), rel=1e-6)
+    assert int(out["types"][0]) == 1 and float(out["anchor_bits"]) > 0.0
+    assert float(out["t_trans"]) == pytest.approx(
+        float(out["total_bits"]) / (6000.0 * 1000.0), rel=1e-6)
+
+
+# ------------------------------------------------------- batched round trip
+@pytest.mark.parametrize("S", [1, 3, 4, 8])
+def test_roundtrip_batched_matches_oracle(det, cfg, S):
+    params, _ = det
+    raw, gtb, gtv = _streams(S)
+    sc = _scalars(S)
+    out = roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+    for s in range(S):
+        lane = {k: v[s] for k, v in out.items()}
+        _assert_lane_equal(lane, _oracle_lane(raw, gtb, gtv, params, sc, s,
+                                              cfg), f"batched[{s}/{S}]")
+
+
+def test_roundtrip_ladder_batched_mixed_rungs(det, cfg):
+    """A mixed bitrate-ladder batch (one padded encode dispatch) is lane-
+    for-lane bit-exact vs each stream's own single-rung two-jit oracle."""
+    params, _ = det
+    S = len(MIXED_LEVELS)
+    raw, gtb, gtv = _streams(S)
+    sc = _scalars(S)
+    out = roundtrip_ladder_batched(raw, gtb, gtv, params,
+                                   levels=MIXED_LEVELS, cfg=cfg, **sc)
+    for s, level in enumerate(MIXED_LEVELS):
+        ocfg = dataclasses.replace(cfg, level=level)
+        lane = {k: v[s] for k, v in out.items()}
+        _assert_lane_equal(lane, _oracle_lane(raw, gtb, gtv, params, sc, s,
+                                              ocfg), f"ladder[{s}]")
+
+
+def test_roundtrip_padded_batched_full_canvas_matches_oracle(det, cfg):
+    """The env's shape-stable dispatch (fixed FULL-size LR canvas, rungs
+    as data) is lane-for-lane bit-exact vs each stream's own single-rung
+    two-jit oracle — canvas margin beyond the batch's largest rung is
+    irrelevant to the masked encode."""
+    from repro.codec.rate_model import (QUALITY_LADDER, downscale,
+                                        ladder_lr_shape)
+    from repro.core.roundtrip import full_lr_canvas, roundtrip_padded_batched
+    params, _ = det
+    S = len(MIXED_LEVELS)
+    raw, gtb, gtv = _streams(S)
+    sc = _scalars(S)
+    hp, wp = full_lr_canvas(H, W)
+    lr_pad, extents, quals = [], [], []
+    for s, level in enumerate(MIXED_LEVELS):
+        lr = downscale(raw[s], QUALITY_LADDER[level].scale)
+        h, w = ladder_lr_shape(level, H, W)
+        lr_pad.append(jnp.pad(lr, ((0, 0), (0, hp - h), (0, wp - w))))
+        extents.append((h, w))
+        quals.append(QUALITY_LADDER[level].quality)
+    out = roundtrip_padded_batched(
+        raw, jnp.stack(lr_pad), jnp.asarray(extents, jnp.int32),
+        jnp.asarray(quals, jnp.float32), gtb, gtv, params, cfg=cfg, **sc)
+    for s, level in enumerate(MIXED_LEVELS):
+        ocfg = dataclasses.replace(cfg, level=level)
+        lane = {k: v[s] for k, v in out.items()}
+        _assert_lane_equal(lane, _oracle_lane(raw, gtb, gtv, params, sc, s,
+                                              ocfg), f"padded[{s}]")
+
+
+def test_roundtrip_ladder_batched_uniform_matches_batched(det, cfg):
+    """All-equal rungs through the padded heterogeneous path reproduce the
+    homogeneous vmap exactly (full-extent masking is the identity)."""
+    params, _ = det
+    raw, gtb, gtv = _streams(3)
+    sc = _scalars(3)
+    hom = roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+    het = roundtrip_ladder_batched(raw, gtb, gtv, params,
+                                   levels=(cfg.level,) * 3, cfg=cfg, **sc)
+    for k in hom:
+        np.testing.assert_array_equal(np.asarray(het[k]),
+                                      np.asarray(hom[k]), err_msg=k)
+
+
+def test_env_detector_backend_uses_roundtrip(det):
+    """The sim env's detector backend dispatches per signature group and
+    reports the round-trip's accuracy/latency/bits per stream."""
+    from repro.sim.env import EnvConfig, MultiStreamEnv
+    from repro.sim.video_source import paper_stream_mix
+    params, det_cfg = det
+    cfg = EnvConfig(streams=tuple(paper_stream_mix(3, H, W)),
+                    chunk_frames=T, accuracy_backend="detector")
+    env = MultiStreamEnv(cfg, detector=(params, det_cfg))
+    results, info = env.step(np.full(3, 1 / 3),
+                             np.full((3, 2), 0.05, np.float32))
+    assert len(results) == 3
+    for c, r in enumerate(results):
+        assert r["stream"] == c
+        assert r["n_anchor"] >= 1              # I-frame is always an anchor
+        assert r["n_anchor"] + r["n_transfer"] == r["n_infer"]
+        assert r["bits"] > 0 and r["latency"] > 0
+        assert 0.0 <= r["accuracy"] <= 1.0
+        assert r["types"].shape == (T,)
+
+
+def test_shard_roundtrip_single_device_matches_batched(det, cfg):
+    """On a 1-extent mesh the sharded wrapper degrades to the batched path
+    — parity guards the padding/broadcast plumbing."""
+    params, _ = det
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    raw, gtb, gtv = _streams(3)
+    sc = _scalars(3)
+    run = shard_roundtrip(mesh, SINGLE_POD_RULES, cfg=cfg)
+    out = run(raw, gtb, gtv, params, **sc)
+    ref = roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]), err_msg=k)
+
+
+# --------------------------------------------------- forced 4-device child
+def test_spawns_multidevice_roundtrip_child():
+    """Driver: re-run ONLY this file's ``forced``-named tests under 4
+    forced CPU devices (mirrors test_stream_sharding.py)."""
+    if _FORCED:
+        pytest.skip("already inside the forced multi-device child")
+    r = conftest.forced_multidevice_run(
+        "tests/test_roundtrip.py", extra_args=["-k", "forced"])
+    assert r.returncode == 0, (
+        f"forced multi-device round-trip child failed\n--- stdout ---\n"
+        f"{r.stdout}\n--- stderr ---\n{r.stderr}")
+    assert "passed" in r.stdout
+
+
+@forced_only
+@pytest.mark.parametrize("S", [1, 3, 4, 8])
+def test_forced_shard_roundtrip_bit_exact_vs_batched(det, cfg, S):
+    """Mesh-sharded round trip equals the single-device batched jit
+    bit-for-bit — including S=1 and S=3, which zero-pad the stream axis up
+    to the mesh extent and drop the padded lanes on exit."""
+    params, _ = det
+    mesh = jax.make_mesh((4,), ("data",))
+    assert stream_shard_count(mesh, SINGLE_POD_RULES) == 4
+    raw, gtb, gtv = _streams(S)
+    sc = _scalars(S)
+    run = shard_roundtrip(mesh, SINGLE_POD_RULES, cfg=cfg)
+    out = run(raw, gtb, gtv, params, **sc)
+    ref = roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(out[k]), np.asarray(ref[k]),
+            err_msg=f"S={S} key {k!r} diverged under sharding")
+
+
+@forced_only
+def test_forced_shard_roundtrip_mixed_ladder_non_divisible(det, cfg):
+    """The heterogeneous-ladder batch shards too: 3 mixed-rung streams on
+    a 4-device mesh (non-divisible — one padded lane) stay bit-exact vs
+    the single-device mixed-ladder jit."""
+    params, _ = det
+    mesh = jax.make_mesh((4,), ("data",))
+    S = len(MIXED_LEVELS)
+    raw, gtb, gtv = _streams(S)
+    sc = _scalars(S)
+    run = shard_roundtrip(mesh, SINGLE_POD_RULES, cfg=cfg)
+    out = run(raw, gtb, gtv, params, levels=MIXED_LEVELS, **sc)
+    ref = roundtrip_ladder_batched(raw, gtb, gtv, params,
+                                   levels=MIXED_LEVELS, cfg=cfg, **sc)
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(out[k]), np.asarray(ref[k]),
+            err_msg=f"mixed-ladder key {k!r} diverged under sharding")
+
+
+@forced_only
+def test_forced_shard_roundtrip_two_dimensional_mesh(det, cfg):
+    params, _ = det
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    assert stream_shard_count(mesh, SINGLE_POD_RULES_DP) == 4
+    raw, gtb, gtv = _streams(4)
+    sc = _scalars(4)
+    run = shard_roundtrip(mesh, SINGLE_POD_RULES_DP, cfg=cfg)
+    out = run(raw, gtb, gtv, params, **sc)
+    ref = roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]), err_msg=k)

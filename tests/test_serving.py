@@ -2,7 +2,6 @@
 elastic pool, end-to-end EdgeRuntime chunk."""
 import jax
 import numpy as np
-import pytest
 
 from repro.serving.elastic import ElasticPool, remesh
 from repro.serving.scheduler import (AdmissionController, InferRequest,

@@ -1,8 +1,6 @@
 """Distribution layer: logical->mesh rules, divisibility demotion,
 param-spec consistency across the whole zoo (property-based)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P

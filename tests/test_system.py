@@ -10,13 +10,11 @@ These validate the *system-level* properties the paper reports:
 """
 import jax
 import numpy as np
-import pytest
 
 from repro.baselines.policies import BASELINES, run_biswift
 from repro.sim.env import EnvConfig, MultiStreamEnv, analytic_f1
 from repro.sim.network import even_allocation
-from repro.sim.video_source import StreamConfig, generate_chunk, \
-    paper_stream_mix
+from repro.sim.video_source import generate_chunk, paper_stream_mix
 
 KEY = jax.random.PRNGKey(0)
 
