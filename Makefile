@@ -21,8 +21,11 @@ lint:
 	ruff check src tests benchmarks
 	-ruff format --check src tests benchmarks
 
+# PYTEST_FLAGS hooks extra options in without forking the command line —
+# CI's latest-jax leg passes --cov=repro --cov-report=xml here (pytest-cov
+# is NOT a local requirement; the container runs this target bare)
 test:
-	PYTHONPATH=src $(PY) -m pytest -x -q
+	PYTHONPATH=src $(PY) -m pytest -x -q $(PYTEST_FLAGS)
 
 # codec/encoder regression net: golden vectors + property tests + kernels
 test-codec:

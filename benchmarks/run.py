@@ -252,14 +252,15 @@ def main() -> None:
     all_rows = []
     t0 = time.time()
     from benchmarks.figures import ALL
+    from benchmarks.bilevel import bilevel_bench
     from benchmarks.encoder import encoder_bench
     from benchmarks.roundtrip import roundtrip_bench
     benches = list(ALL.items()) + [
         (fn.__name__, fn)
         for fn in (kernel_microbench, realistic_shape_bench, pipeline_bench,
                    codec_bench, encoder_bench, roundtrip_bench,
-                   stream_sharding_bench, roundtrip_sharding_bench,
-                   roofline_summary)]
+                   bilevel_bench, stream_sharding_bench,
+                   roundtrip_sharding_bench, roofline_summary)]
     for name, fn in benches:
         try:
             all_rows.extend(fn())

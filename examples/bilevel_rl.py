@@ -18,12 +18,19 @@ def main():
     ap.add_argument("--streams", type=int, default=4)
     ap.add_argument("--chunks", type=int, default=60)
     ap.add_argument("--chunk-frames", type=int, default=4)
+    ap.add_argument("--mode", choices=("stacked", "loop"), default="stacked",
+                    help="fused single-jit control plane (default) or the "
+                         "per-stream loop oracle — same numbers, "
+                         "bit-for-bit (docs/bilevel.md)")
     args = ap.parse_args()
 
     cfg = EnvConfig(streams=tuple(paper_stream_mix(args.streams, 64, 96)),
                     chunk_frames=args.chunk_frames)
     trainer = BiLevelTrainer.create(cfg, seed=0)
-    hist = trainer.train_steps(args.chunks)
+    if args.mode == "loop":
+        hist = [trainer.run_chunk_loop()[0] for _ in range(args.chunks)]
+    else:
+        hist = trainer.train_steps(args.chunks)
 
     k = max(args.chunks // 6, 1)
     print("chunk | mean_acc | min_acc | reward_min | jain | util")

@@ -4,17 +4,41 @@ Wraps the high-level SAC agent: observes S_high = (num, size, r, b_L, acc,
 p), emits the per-stream bandwidth proportion vector every
 ``controller_interval`` chunks (10 s in the paper), and is trained with
 reward r_high = min_c r_c (Eq. 6).  Baseline comparison: even allocation.
+
+Two act paths share the same traced expression (bit-exact parity
+contract, docs/bilevel.md): :meth:`proportions` dispatches the jitted
+``act_proportions`` per reallocation (the loop oracle), while the fused
+``repro.core.bilevel.bilevel_step`` inlines ``_act_proportions`` into its
+single-jit trace and syncs the host-side cache back via :meth:`adopt`.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
+import jax
 import numpy as np
 
 from repro.rl import sac
 from repro.rl.replay import ReplayBuffer
 
 f32 = np.float32
+
+
+def normalize_proportions(a):
+    """Controller action -> bandwidth proportions (floor 1e-3, sum 1)."""
+    p = a + 1e-3
+    return p / p.sum()
+
+
+def _act_proportions(key, agent, state, explore: bool = True):
+    """(raw action, normalized proportions) — raw feeds the replay
+    buffer, proportions feed allocation and every low-level state."""
+    a = sac._act(key, agent, state, explore)
+    return a, normalize_proportions(a)
+
+
+act_proportions = partial(jax.jit, static_argnums=(3,))(_act_proportions)
 
 
 @dataclasses.dataclass
@@ -35,16 +59,24 @@ class BandwidthController:
         buf = ReplayBuffer(cfg.buffer_size, state_dim, n_streams)
         return cls(agent=agent, cfg=cfg, buffer=buf, interval=interval)
 
+    def needs_act(self, t: int) -> bool:
+        return self._current is None or t % self.interval == 0
+
     def proportions(self, key, state: np.ndarray, t: int,
                     explore: bool = True) -> np.ndarray:
         """Controller action; recomputed every ``interval`` chunks."""
-        if self._current is None or t % self.interval == 0:
-            a = np.asarray(sac.act(key, self.agent, state, explore))
-            self._last_state = state
-            self._last_action = a
-            p = a + 1e-3
-            self._current = (p / p.sum()).astype(f32)
+        if self.needs_act(t):
+            a, p = act_proportions(key, self.agent, state, explore)
+            self.adopt(np.asarray(a), np.asarray(p, f32), state)
         return self._current
+
+    def adopt(self, raw_action: np.ndarray, props: np.ndarray,
+              state: np.ndarray):
+        """Install a freshly computed action (from :meth:`proportions` or
+        from the fused bilevel_step's inlined act on recompute chunks)."""
+        self._last_state = state
+        self._last_action = raw_action
+        self._current = props
 
     def record(self, reward: float, next_state: np.ndarray,
                done: bool = False):
@@ -52,10 +84,13 @@ class BandwidthController:
             self.buffer.add(self._last_state, self._last_action, reward,
                             next_state, done)
 
+    def ready(self) -> bool:
+        return len(self.buffer) >= self.cfg.minibatch
+
     def train(self, key, n_updates: int = 1):
         logs = []
         for _ in range(n_updates):
-            if len(self.buffer) < self.cfg.minibatch:
+            if not self.ready():
                 break
             batch = self.buffer.sample(self.cfg.minibatch)
             self.agent, log = sac.update(key, self.agent, batch, self.cfg)

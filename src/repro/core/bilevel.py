@@ -5,88 +5,165 @@ classification agents, A2C) are trained jointly: the controller's action
 conditions every agent's state (allocations appear in S_c), and the
 agents' decisions feed back into S_high (anchor proportions p, accuracy).
 Experience flows every chunk; the controller acts every 10 chunks.
+
+Fused control plane (PR 5): the C low-level agents live in ONE stacked
+pytree (``a2c.init_stacked``) and the whole per-chunk RL sequence —
+stacked A2C update, SAC update, controller proportions, low-level state
+assembly, all C threshold actions, and the Eq. 6 fairness reduction —
+runs as a single jit, :func:`bilevel_step`, instead of 2C+2 per-stream
+dispatches.  Because the environment sits between act and train, the
+fused step is shifted one chunk: the dispatch at chunk t first applies
+the updates for chunk t-1's transitions (whose rewards the host observed
+after the env step), then acts for chunk t.  Relative order of update and
+act is exactly the loop's, so :meth:`BiLevelTrainer.run_chunk` is
+bit-exact (f32) against the per-stream oracle
+:meth:`BiLevelTrainer.run_chunk_loop` — actions, rewards, metrics and
+(after :meth:`BiLevelTrainer.flush`) parameters.  See docs/bilevel.md for
+the parity contract and jit-boundary rules.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bandwidth_controller import BandwidthController
-from repro.core.fairness import jain_index
-from repro.rl import a2c
-from repro.rl.replay import ReplayBuffer
+from repro.core.bandwidth_controller import BandwidthController, \
+    _act_proportions
+from repro.core.fairness import fairness_head, jain_index
+from repro.rl import a2c, sac
+from repro.rl.replay import StackedReplayBuffer
 from repro.sim.env import EnvConfig, MultiStreamEnv, low_state_dim, \
-    high_state_dim
+    high_state_dim, low_alloc_offset
 
 f32 = np.float32
+
+# threshold actions in (0,1) scale into the feature range (~[0, 0.5])
+THRESHOLD_SCALE = (0.5, 0.5)
+
+_barrier = jax.lax.optimization_barrier
+
+
+@partial(jax.jit, static_argnames=("low_cfg", "sac_cfg", "explore",
+                                   "do_low", "do_high", "alloc_off"))
+def bilevel_step(low_stack, sac_agent, k_hi, k_lo, k_tr, s_high,
+                 cached_raw, cached_props, recompute, s_low_base,
+                 prev_rewards, prev_accs, low_batch, sac_batch, *,
+                 low_cfg: a2c.A2CConfig, sac_cfg: sac.SACConfig,
+                 explore: bool, do_low: bool, do_high: bool,
+                 alloc_off: int):
+    """ONE dispatch for the whole bi-level control plane of a chunk.
+
+    Order inside the trace mirrors the loop oracle's dispatch sequence:
+    train on the previous chunk's transitions first (stacked A2C update +
+    SAC update), then act (controller proportions -> low-level states ->
+    all C thresholds).  ``optimization_barrier`` fences each component so
+    XLA compiles it as the same fusion island as its standalone jit —
+    that, plus ``networks.dense``'s batch-count-stable reduction, is what
+    makes the fused step bit-exact against the per-stream loop.
+
+    Static flags: ``do_low``/``do_high`` gate the update islands (they
+    flip once, when the replay buffers first fill); ``recompute`` is
+    traced (it flips every ``controller_interval`` chunks — retracing
+    there would negate the fusion).
+    """
+    logs = {}
+    # Eq. 6 / fairness reductions of the previous chunk's outcome — the
+    # controller reward and the cross-stream dispersion diagnostics
+    logs["fair"] = fairness_head(prev_rewards, prev_accs)
+
+    # ---- train (previous chunk's transitions) -------------------------
+    if do_low:
+        low_stack, llog = jax.vmap(a2c._update, in_axes=(0, 0, None))(
+            low_stack, low_batch, low_cfg)
+        low_stack = _barrier(low_stack)
+        logs["low"] = llog
+    if do_high:
+        sac_agent, hlog = sac._update(k_tr, sac_agent, sac_batch, sac_cfg)
+        sac_agent = _barrier(sac_agent)
+        logs["high"] = hlog
+
+    # ---- controller proportions (recomputed every interval chunks) ----
+    raw, fresh = _act_proportions(k_hi, sac_agent, s_high, explore)
+    raw = jnp.where(recompute, raw, cached_raw)
+    props = _barrier(jnp.where(recompute, fresh, cached_props))
+
+    # ---- low-level states: host-built base + in-trace allocations -----
+    C = props.shape[0]
+    s_low = s_low_base.at[:, alloc_off:alloc_off + C].set(props)
+
+    # ---- stacked act: all C thresholds in one island ------------------
+    actions = _barrier(jax.vmap(a2c._act, in_axes=(0, 0, 0, None))(
+        k_lo, low_stack, s_low, explore))
+    thr = actions * jnp.asarray(THRESHOLD_SCALE, jnp.float32)
+    return {"low_stack": low_stack, "sac_agent": sac_agent, "raw": raw,
+            "props": props, "s_low": s_low, "actions": actions,
+            "thr": thr, "logs": logs}
 
 
 @dataclasses.dataclass
 class BiLevelTrainer:
     env: MultiStreamEnv
-    low_agents: list
+    low_stack: dict
     low_cfg: a2c.A2CConfig
     controller: BandwidthController
-    low_buffers: list
+    low_buffer: StackedReplayBuffer
     key: jax.Array
     low_batch: int = 32
+    # deferred train work for the fused path: the update for chunk t's
+    # transitions rides in chunk t+1's bilevel_step dispatch
+    _pending: dict | None = None
 
     @classmethod
-    def create(cls, cfg: EnvConfig, seed: int = 0, detector=None):
+    def create(cls, cfg: EnvConfig, seed: int = 0, detector=None,
+               low_batch: int = 32):
         env = MultiStreamEnv(cfg, detector=detector)
         key = jax.random.PRNGKey(seed)
         C = len(cfg.streams)
         sdim = low_state_dim(cfg)
         low_cfg = a2c.A2CConfig(state_dim=sdim, tau_latency=cfg.latency_tau)
         keys = jax.random.split(key, C + 2)
-        agents = [a2c.init(keys[i], low_cfg) for i in range(C)]
+        low_stack = a2c.init_stacked(keys[:C], low_cfg)
         controller = BandwidthController.create(
             keys[C], high_state_dim(cfg), C, cfg.controller_interval)
-        bufs = [ReplayBuffer(4096, sdim, 2, seed=i) for i in range(C)]
-        return cls(env=env, low_agents=agents, low_cfg=low_cfg,
-                   controller=controller, low_buffers=bufs, key=keys[C + 1])
+        buf = StackedReplayBuffer(4096, C, sdim, 2)
+        return cls(env=env, low_stack=low_stack, low_cfg=low_cfg,
+                   controller=controller, low_buffer=buf, key=keys[C + 1],
+                   low_batch=low_batch)
 
     # ------------------------------------------------------------------
-    def run_chunk(self, explore: bool = True, train: bool = True):
-        env, C = self.env, self.env.C
+    def _chunk_keys(self):
+        """The per-chunk PRNG splits — shared verbatim by both paths so
+        they consume the key stream identically."""
         self.key, k_hi, k_tr = jax.random.split(self.key, 3)
-        klo = jax.random.split(self.key, C)
+        klo = jax.random.split(self.key, self.env.C)
+        return k_hi, k_tr, klo
 
-        s_high = env.observe_high()
-        props = self.controller.proportions(k_hi, s_high, env.t, explore)
-        s_low = [env.observe_low(c, props) for c in range(C)]
-        thresholds = np.stack([
-            np.asarray(a2c.act(klo[c], self.low_agents[c], s_low[c],
-                               explore)) for c in range(C)])
-        # scale thresholds into feature range (features are ~[0, 0.5])
-        thr = thresholds * np.array([0.5, 0.5], f32)
-
-        results, info = env.step(props, thr)
-
+    def _post_step(self, results, s_low, thresholds, props, k_tr, train):
+        """Everything after the env step, identical in both paths:
+        rewards, controller experience, low-level replay writes, and the
+        book-keeping for the (fused path's) deferred update."""
+        env, C = self.env, self.env.C
         rewards = np.asarray([r["reward"] for r in results], f32)
         r_high = float(rewards.min())                     # Eq. 6
         s_high2 = env.observe_high()
         self.controller.record(r_high, s_high2)
-        s_low2 = [env.observe_low(c, props) for c in range(C)]
-        for c in range(C):
-            self.low_buffers[c].add(s_low[c], thresholds[c], rewards[c],
-                                    s_low2[c], False)
+        s_low2 = env.observe_low_batched(props)
+        self.low_buffer.add_batch(s_low, thresholds, rewards, s_low2,
+                                  np.zeros(C, f32))
+        self._pending = {
+            "k_tr": k_tr,
+            "do_low": bool(train and len(self.low_buffer) >= self.low_batch),
+            "do_high": bool(train and self.controller.ready()),
+            "rewards": rewards,
+            "accs": np.asarray([r["accuracy"] for r in results], f32),
+        }
+        return rewards, r_high
 
-        logs = {}
-        if train:
-            for c in range(C):
-                if len(self.low_buffers[c]) >= self.low_batch:
-                    batch = self.low_buffers[c].sample(self.low_batch)
-                    self.low_agents[c], llog = a2c.update(
-                        self.low_agents[c], batch, self.low_cfg)
-                    logs[f"low{c}"] = {k: float(v) for k, v in llog.items()}
-            hlogs = self.controller.train(k_tr, n_updates=1)
-            if hlogs:
-                logs["high"] = {k: float(v) for k, v in hlogs[-1].items()}
-
-        metrics = {
+    def _metrics(self, results, r_high):
+        return {
             "mean_acc": float(np.mean([r["accuracy"] for r in results])),
             "min_acc": float(np.min([r["accuracy"] for r in results])),
             "mean_latency": float(np.mean([r["latency"] for r in results])),
@@ -98,11 +175,132 @@ class BiLevelTrainer:
             "anchor_frac": float(np.mean([r["n_anchor"] / len(r["types"])
                                           for r in results])),
         }
-        return metrics, results, info, logs
+
+    # ------------------------------------------------------------------
+    def run_chunk(self, explore: bool = True, train: bool = True):
+        """Fused path: one ``bilevel_step`` dispatch per chunk (the
+        deferred update for the previous chunk + all of this chunk's
+        actions), then the env step.  Call :meth:`flush` after the final
+        chunk to apply the last deferred update (the loop oracle trains
+        inside every chunk, so parity of FINAL parameters needs it)."""
+        env, C = self.env, self.env.C
+        k_hi, k_tr, klo = self._chunk_keys()
+
+        s_high = env.observe_high()
+        s_low_base = env.observe_low_batched(None)
+        recompute = self.controller.needs_act(env.t)
+        pend = self._pending
+        do_low = bool(pend and pend["do_low"])
+        do_high = bool(pend and pend["do_high"])
+        low_b = self.low_buffer.sample(self.low_batch) if do_low else None
+        sac_b = self.controller.buffer.sample(
+            self.controller.cfg.minibatch) if do_high else None
+        zc = np.zeros(C, f32)
+        cached_raw = self.controller._last_action \
+            if self.controller._last_action is not None else zc
+        cached_props = self.controller._current \
+            if self.controller._current is not None else zc
+        out = bilevel_step(
+            self.low_stack, self.controller.agent, k_hi, klo,
+            pend["k_tr"] if pend else k_tr, jnp.asarray(s_high),
+            jnp.asarray(cached_raw), jnp.asarray(cached_props),
+            jnp.asarray(recompute), jnp.asarray(s_low_base),
+            jnp.asarray(pend["rewards"] if pend else zc),
+            jnp.asarray(pend["accs"] if pend else zc),
+            low_b, sac_b, low_cfg=self.low_cfg,
+            sac_cfg=self.controller.cfg, explore=explore, do_low=do_low,
+            do_high=do_high, alloc_off=low_alloc_offset(env.cfg))
+
+        self.low_stack = out["low_stack"]
+        if do_high:
+            self.controller.agent = out["sac_agent"]
+            self.controller.updates += 1
+        props = np.asarray(out["props"], f32)
+        if recompute:
+            self.controller.adopt(np.asarray(out["raw"]), props, s_high)
+        thresholds = np.asarray(out["actions"], f32)
+        thr = np.asarray(out["thr"], f32)
+        s_low = np.asarray(out["s_low"], f32)
+
+        results, info = env.step(props, thr)
+        _, r_high = self._post_step(results, s_low, thresholds, props,
+                                    k_tr, train)
+        logs = {}
+        if pend:
+            # the in-trace Eq. 6 / fairness reductions of the PREVIOUS
+            # chunk's outcome (this dispatch applied that chunk's update)
+            logs["fair_prev"] = {k: float(v) for k, v in
+                                 out["logs"]["fair"].items()}
+        if do_low:
+            llog = out["logs"]["low"]
+            for c in range(C):
+                logs[f"low{c}"] = {k: float(v[c]) for k, v in llog.items()}
+        if do_high:
+            logs["high"] = {k: float(v) for k, v in
+                            out["logs"]["high"].items()}
+        return self._metrics(results, r_high), results, info, logs
+
+    def flush(self):
+        """Apply the deferred final update (fused path only; no-op when
+        nothing is pending).  After ``run_chunk`` × n + ``flush()`` the
+        parameters are bit-exact vs ``run_chunk_loop`` × n."""
+        pend, self._pending = self._pending, None
+        logs = {}
+        if pend and pend["do_low"]:
+            batch = self.low_buffer.sample(self.low_batch)
+            self.low_stack, llog = a2c.update_stacked(
+                self.low_stack, batch, self.low_cfg)
+            for c in range(self.env.C):
+                logs[f"low{c}"] = {k: float(v[c]) for k, v in llog.items()}
+        if pend and pend["do_high"]:
+            hlogs = self.controller.train(pend["k_tr"], n_updates=1)
+            if hlogs:
+                logs["high"] = {k: float(v) for k, v in hlogs[-1].items()}
+        return logs
+
+    # ------------------------------------------------------------------
+    def run_chunk_loop(self, explore: bool = True, train: bool = True):
+        """Per-stream loop ORACLE: 2C+2 small dispatches per chunk, kept
+        as the bit-exactness baseline for the fused path (and as the
+        reference implementation of the paper's Fig. 9 sequence)."""
+        self.flush()    # mode mixing: apply any fused-path deferred update
+        env, C = self.env, self.env.C
+        k_hi, k_tr, klo = self._chunk_keys()
+
+        s_high = env.observe_high()
+        props = self.controller.proportions(k_hi, s_high, env.t, explore)
+        s_low = np.stack([env.observe_low(c, props) for c in range(C)])
+        thresholds = np.stack([
+            np.asarray(a2c.act(klo[c], a2c.slice_agent(self.low_stack, c),
+                               s_low[c], explore)) for c in range(C)])
+        thr = thresholds * np.asarray(THRESHOLD_SCALE, f32)
+
+        results, info = env.step(props, thr)
+        rewards, r_high = self._post_step(results, s_low, thresholds,
+                                          props, k_tr, train)
+        self._pending = None        # the loop trains inside the chunk
+
+        logs = {}
+        if train:
+            lens = self.low_buffer.lens()
+            for c in range(C):
+                if lens[c] >= self.low_batch:
+                    batch = self.low_buffer.sample_stream(c, self.low_batch)
+                    agent_c, llog = a2c.update(
+                        a2c.slice_agent(self.low_stack, c), batch,
+                        self.low_cfg)
+                    self.low_stack = a2c.set_agent(self.low_stack, c,
+                                                   agent_c)
+                    logs[f"low{c}"] = {k: float(v) for k, v in llog.items()}
+            hlogs = self.controller.train(k_tr, n_updates=1)
+            if hlogs:
+                logs["high"] = {k: float(v) for k, v in hlogs[-1].items()}
+        return self._metrics(results, r_high), results, info, logs
 
     def train_steps(self, n: int, explore: bool = True):
         history = []
         for _ in range(n):
             metrics, _, _, _ = self.run_chunk(explore=explore, train=True)
             history.append(metrics)
+        self.flush()
         return history

@@ -22,3 +22,16 @@ def accuracy_spread(accs, lo: float = 0.5, hi: float = 0.75):
     v = jnp.sort(jnp.asarray(accs, f32))
     n = v.shape[0]
     return v[int(hi * (n - 1))] - v[int(lo * (n - 1))]
+
+
+def fairness_head(rewards, accs):
+    """The cross-stream reductions of the bi-level step, in one place so
+    the fused ``bilevel_step`` trace and host-side logging agree on the
+    definitions: controller reward r_high = min_c r_c (Eq. 6), Jain index
+    and percentile spread over per-stream accuracy.  Pure jnp — traceable
+    inside the single-jit scheduler step."""
+    return {
+        "r_high": min_reward_fairness(jnp.asarray(rewards, f32)),
+        "jain": jain_index(accs),
+        "spread": accuracy_spread(accs),
+    }

@@ -4,6 +4,18 @@ Per-camera agent choosing the two classification thresholds (tr1, tr2) per
 chunk.  Hyper-parameters from the paper: Adam lr 0.005 (actor) / 0.01
 (critic), discount γ = 0.9, reward r = α1·acc − α2·latency-penalty with
 α1 = α2 = 0.5, τ = 1 s.
+
+Stacked layout (PR 5): the C per-stream agents of the bi-level control
+plane live in ONE pytree whose leaves carry a leading stream axis
+(``init_stacked``), so ``act``/``update`` vectorize over all streams in a
+single dispatch (``act_stacked``/``update_stacked`` are the jitted vmap
+forms; ``repro.core.bilevel.bilevel_step`` inlines the same ``_act`` /
+``_update`` bodies into its own trace).  Parity contract: the vmapped
+forms are bit-exact (f32) against the per-stream calls for any stream
+count — this relies on ``networks.dense`` avoiding batch-count-dependent
+gemm lowering, and on BOTH paths being jit-compiled (eager mode skips the
+fused multiply-adds XLA emits under jit).  Locked down by
+tests/test_rl_bilevel.py.
 """
 from __future__ import annotations
 
@@ -49,17 +61,48 @@ def init(key, cfg: A2CConfig):
     }
 
 
-def act(key, agent, state, explore: bool = True):
+def init_stacked(keys, cfg: A2CConfig):
+    """C agents as one pytree with a leading stream axis.
+
+    ``keys`` is a (C,)-batched PRNG key array; leaf c of the result is
+    bit-identical to ``init(keys[c], cfg)`` (built by stacking the
+    per-key inits, so stacked-vs-loop parity starts from equal params).
+    """
+    agents = [init(k, cfg) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *agents)
+
+
+def slice_agent(stacked, c: int):
+    """Agent ``c`` of a stacked pytree (a view fit for the per-stream
+    ``act``/``update``; slicing is exact)."""
+    return jax.tree.map(lambda x: x[c], stacked)
+
+
+def set_agent(stacked, c: int, agent):
+    """Write a per-stream agent back into the stack (oracle loop only)."""
+    return jax.tree.map(lambda s, a: s.at[c].set(a), stacked, agent)
+
+
+def n_stacked(stacked) -> int:
+    return jax.tree.leaves(stacked)[0].shape[0]
+
+
+def _act(key, agent, state, explore: bool = True):
     mu, log_std = N.low_actor_apply(agent["actor"], state)
-    if explore:
-        a, _ = N.sample_squashed(key, mu, log_std)
-    else:
-        a = N.deterministic_action(mu)
-    return a  # (action_dim,) in (0,1): [tr1, tr2]
+    return N.policy_action(key, mu, log_std, explore)
 
 
-@partial(jax.jit, static_argnums=(2,))
-def update(agent, batch, cfg: A2CConfig):
+# jitted: the fused control plane requires BOTH sides of the parity
+# contract to see XLA's codegen (eager skips jit-only fma contractions)
+act = partial(jax.jit, static_argnums=(3,))(_act)
+act.__doc__ = "(action_dim,) action in (0,1): [tr1, tr2]."
+
+# one dispatch for all C agents: (C,) keys, stacked agents, (C, S) states
+act_stacked = partial(jax.jit, static_argnums=(3,))(
+    jax.vmap(_act, in_axes=(0, 0, 0, None)))
+
+
+def _update(agent, batch, cfg: A2CConfig):
     """On-policy update over a batch of transitions.
 
     batch: states (B, S), actions (B, A), rewards (B,), next_states (B, S),
@@ -107,3 +150,11 @@ def update(agent, batch, cfg: A2CConfig):
              "opt_a": opt_a, "opt_c": opt_c},
             {"actor_loss": al, "critic_loss": cl,
              "mean_adv": adv.mean()})
+
+
+update = partial(jax.jit, static_argnums=(2,))(_update)
+update.__doc__ = _update.__doc__
+
+# one dispatch updates all C agents from a (C, B, ...) batch stack
+update_stacked = partial(jax.jit, static_argnums=(2,))(
+    jax.vmap(_update, in_axes=(0, 0, None)))

@@ -3,6 +3,16 @@
 Low level (per camera, actor-critic): policy + value both 2-layer MLPs with
 128 units, ReLU.  High level (bandwidth controller, SAC): policy 4-layer
 MLP 256 units; value/Q 3-layer MLPs 256 units, ReLU.
+
+The dense layers deliberately avoid ``x @ w`` (``dot_general``): XLA's CPU
+gemm picks a batch-count-dependent accumulation order (a degenerate C=1
+batch is rewritten to a plain gemm with a different algorithm than the
+C-batched kernel), which breaks the stacked-vs-loop bit-exactness contract
+of the bi-level control plane (docs/bilevel.md).  The broadcast-multiply +
+``sum(-2)`` form reduces each output element in the same order under
+eager, jit, and ``vmap`` at ANY leading batch count — verified by
+tests/test_rl_bilevel.py — and these control-plane MLPs are far too small
+for the gemm to matter.
 """
 from __future__ import annotations
 
@@ -22,9 +32,14 @@ def mlp_specs(sizes, name="mlp"):
     return p
 
 
+def dense(x, w, b):
+    """Batch-count-stable dense layer (see module docstring)."""
+    return (x[..., :, None] * w).sum(-2) + b
+
+
 def mlp_apply(params, x, n_layers: int, final_activation=None):
     for i in range(n_layers):
-        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        x = dense(x, params[f"w{i}"], params[f"b{i}"])
         if i < n_layers - 1:
             x = jax.nn.relu(x)
     if final_activation is not None:
@@ -97,3 +112,15 @@ def sample_squashed(key, mu, log_std):
 
 def deterministic_action(mu):
     return 0.5 * (jnp.tanh(mu) + 1.0)
+
+
+def policy_action(key, mu, log_std, explore: bool):
+    """Squashed-Gaussian action in (0,1): sampled or deterministic.
+
+    ``explore`` is a Python bool (static under jit) — both the A2C and SAC
+    act paths route through here so the loop oracle and the fused
+    ``bilevel_step`` trace the identical expression."""
+    if explore:
+        a, _ = sample_squashed(key, mu, log_std)
+        return a
+    return deterministic_action(mu)

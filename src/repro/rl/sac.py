@@ -49,17 +49,18 @@ def init(key, cfg: SACConfig):
     }
 
 
-def act(key, agent, state, explore: bool = True):
+def _act(key, agent, state, explore: bool = True):
     mu, log_std = N.high_actor_apply(agent["actor"], state)
-    if explore:
-        a, _ = N.sample_squashed(key, mu, log_std)
-    else:
-        a = N.deterministic_action(mu)
-    return a     # (C,) in (0,1); normalized to proportions by the caller
+    return N.policy_action(key, mu, log_std, explore)
 
 
-@partial(jax.jit, static_argnums=(3,))
-def update(key, agent, batch, cfg: SACConfig):
+# jitted (fused-control-plane parity: both sides must see XLA's codegen;
+# eager mode skips the fused multiply-adds jit emits) — see rl/a2c.py
+act = partial(jax.jit, static_argnums=(3,))(_act)
+act.__doc__ = "(C,) action in (0,1); normalized to proportions by caller."
+
+
+def _update(key, agent, batch, cfg: SACConfig):
     s, a, r, s2, done = (batch["states"], batch["actions"],
                          batch["rewards"], batch["next_states"],
                          batch["dones"])
@@ -116,3 +117,7 @@ def update(key, agent, batch, cfg: SACConfig):
                  "opt_q1": oq1, "opt_q2": oq2}
     return new_agent, {"q_loss": 0.5 * (ql1 + ql2), "v_loss": vl,
                        "pi_loss": pl}
+
+
+update = partial(jax.jit, static_argnums=(3,))(_update)
+

@@ -104,6 +104,14 @@ def low_state_dim(cfg: EnvConfig) -> int:
     return 128 + cfg.chunk_frames + 2 + len(cfg.streams) + 2
 
 
+def low_alloc_offset(cfg: EnvConfig) -> int:
+    """Column where the (C,) allocation block starts inside the low-level
+    state vector — the fused ``bilevel_step`` writes the controller's
+    in-trace proportions there (the only state component that depends on
+    the controller action, so everything else batches host-side)."""
+    return 128 + cfg.chunk_frames + 2
+
+
 def high_state_dim(cfg: EnvConfig) -> int:
     C = len(cfg.streams)
     # num, size, residual, prev alloc, acc, anchor fraction  (paper §V-B)
@@ -162,21 +170,43 @@ class MultiStreamEnv:
         return float(self.trace[self.t % len(self.trace)])
 
     # ------------------------------------------------------------------
-    def observe_low(self, c: int, allocations) -> np.ndarray:
-        frames, _, _ = self._chunk(c)
+    def _low_features(self, frames) -> tuple:
+        """(content grid, frame-diff) features of one chunk — the
+        allocation-independent part of S_c, shared by the per-stream and
+        batched observers (identical numpy expressions, so the two paths
+        are bit-identical)."""
         key_frame = frames[0]
         h, w = key_frame.shape
         grid = key_frame[: h // 8 * 8, : w // 16 * 16].reshape(
             8, h // 8, 16, w // 16).mean(axis=(1, 3)) / 255.0
         fd = np.abs(np.diff(frames, axis=0)).mean(axis=(1, 2)) / 255.0
         fd = np.concatenate([[0.0], fd])
+        return grid.reshape(-1).astype(f32), fd.astype(f32)
+
+    def observe_low(self, c: int, allocations) -> np.ndarray:
+        frames, _, _ = self._chunk(c)
+        content, fd = self._low_features(frames)
         level = QUALITY_LADDER[0]
-        obs = StreamObs(content=grid.reshape(-1).astype(f32),
-                        frame_diff=fd.astype(f32),
+        obs = StreamObs(content=content, frame_diff=fd,
                         bitrate=level.bitrate_kbps, resolution=level.scale,
                         allocations=np.asarray(allocations, f32),
                         queues=self.queues.copy())
         return obs.vector()
+
+    def observe_low_batched(self, allocations=None) -> np.ndarray:
+        """All C low-level states as one (C, sdim) array — the batched
+        observation the stacked control plane consumes in a single call
+        (bit-identical rows to :meth:`observe_low`).
+
+        ``allocations=None`` zeroes the allocation block: the fused
+        ``bilevel_step`` computes the controller proportions INSIDE its
+        trace and writes them at ``low_alloc_offset`` itself.
+        """
+        C = self.C
+        if allocations is None:
+            allocations = np.zeros(C, f32)
+        return np.stack([self.observe_low(c, allocations)
+                         for c in range(C)])
 
     def observe_high(self) -> np.ndarray:
         """Paper §V-B state: num, size, residual, prev alloc, acc, anchors."""

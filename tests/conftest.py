@@ -60,6 +60,12 @@ def forced_multidevice_run(pytest_target: str, n_devices: int = 4,
         capture_output=True, text=True, timeout=timeout)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running integration test (still tier-1; "
+        "deselect with -m 'not slow' for a quick pass)")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

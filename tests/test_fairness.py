@@ -1,0 +1,82 @@
+"""Property tests for ``repro.core.fairness`` (paper Eq. 1/6, Fig. 12).
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+shim (src/_hypothesis_shim.py registered by conftest) — same test code
+either way.  These are the invariants the bi-level controller's reward
+head relies on; the module previously had only two spot checks in
+test_biswift_core.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fairness import (accuracy_spread, fairness_head,
+                                 jain_index, min_reward_fairness)
+
+finite_floats = st.floats(min_value=0.01, max_value=1.0)
+
+
+@settings(deadline=None, max_examples=25)
+@given(vals=st.lists(finite_floats, min_size=1, max_size=16))
+def test_jain_index_bounds(vals):
+    """1/n (one stream hogs everything) <= J <= 1 (perfect equality)."""
+    n = len(vals)
+    j = float(jain_index(jnp.asarray(vals, jnp.float32)))
+    assert 1.0 / n - 1e-5 <= j <= 1.0 + 1e-5, (vals, j)
+
+
+@settings(deadline=None, max_examples=25)
+@given(vals=st.lists(finite_floats, min_size=1, max_size=12),
+       scale=st.floats(min_value=0.1, max_value=100.0))
+def test_jain_index_scale_invariant(vals, scale):
+    """Jain's index depends only on the SHAPE of the allocation: J(c*v)
+    == J(v) (f32 tolerance — the reductions see rescaled values)."""
+    v = jnp.asarray(vals, jnp.float32)
+    a, b = float(jain_index(v)), float(jain_index(scale * v))
+    assert abs(a - b) < 1e-4, (vals, scale, a, b)
+
+
+def test_jain_index_extremes():
+    assert float(jain_index(jnp.ones(9))) == 1.0
+    one_hot = jnp.zeros(8).at[3].set(5.0)
+    np.testing.assert_allclose(float(jain_index(one_hot)), 1.0 / 8,
+                               rtol=1e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(vals=st.lists(st.floats(min_value=-1.0, max_value=1.0),
+                     min_size=1, max_size=16))
+def test_min_reward_fairness_is_true_min_under_permutation(vals):
+    """Eq. 6's reduction is exactly the minimum, invariant to stream
+    order (bit-exact: min is order-free in fp)."""
+    v = np.asarray(vals, np.float32)
+    want = v.min()
+    assert float(min_reward_fairness(jnp.asarray(v))) == want
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        perm = rng.permutation(len(v))
+        assert float(min_reward_fairness(jnp.asarray(v[perm]))) == want
+
+
+@settings(deadline=None, max_examples=25)
+@given(vals=st.lists(finite_floats, min_size=1, max_size=16))
+def test_accuracy_spread_nonnegative(vals):
+    """p75 - p50 of the sorted accuracies can never be negative."""
+    assert float(accuracy_spread(jnp.asarray(vals, jnp.float32))) >= 0.0
+
+
+@settings(deadline=None, max_examples=10)
+@given(val=finite_floats, n=st.integers(min_value=1, max_value=12))
+def test_accuracy_spread_zero_for_constant(val, n):
+    v = jnp.full((n,), val, jnp.float32)
+    assert float(accuracy_spread(v)) == 0.0
+
+
+def test_fairness_head_matches_components():
+    """The fused-step reduction head is exactly its three components."""
+    rewards = jnp.asarray([0.3, -0.1, 0.5], jnp.float32)
+    accs = jnp.asarray([0.9, 0.6, 0.8], jnp.float32)
+    out = fairness_head(rewards, accs)
+    assert float(out["r_high"]) == float(min_reward_fairness(rewards))
+    assert float(out["jain"]) == float(jain_index(accs))
+    assert float(out["spread"]) == float(accuracy_spread(accs))

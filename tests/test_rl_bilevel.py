@@ -1,32 +1,47 @@
-"""DRL layers: A2C and SAC learn simple synthetic tasks; the bi-level
-trainer improves min-stream reward over random allocation."""
+"""DRL layers: A2C and SAC learn simple synthetic tasks; the stacked
+bi-level control plane is bit-exact (f32) against the per-stream loop
+oracle — actions, rewards, replay sampling order, and post-update
+parameters for C ∈ {1, 3, 8} (ISSUE 5 parity contract, docs/bilevel.md).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.rl import a2c, sac
-from repro.rl.replay import ReplayBuffer
+from repro.rl.replay import ReplayBuffer, StackedReplayBuffer
 
 KEY = jax.random.PRNGKey(0)
 
 
-def test_a2c_learns_threshold_bandit():
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ------------------------------------------------------------- learning
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_a2c_learns_threshold_bandit(seed):
     """Reward = 1 - |a - 0.7|: the actor mean converges to the optimum.
 
-    Deterministically seeded (PRNGKey(0) policy noise, default_rng(0)
-    states) and asserted on a ROBUST trend statistic — the trailing-window
-    mean of the deterministic action — instead of the final iterate: at
-    the paper's lr (0.005) single iterates oscillate around the optimum
-    (tanh-squash saturation excursions), which made the old point-in-time
-    assertion flaky.  lr 0.002 + a 50-iteration window is stable across
-    seeds (window error 0.02-0.06 vs the 0.15 bound for seeds 0/1/2)."""
+    Deterministically seeded and asserted on a ROBUST trend statistic —
+    the trailing-window mean of the deterministic action — instead of the
+    final iterate: at the paper's lr (0.005) single iterates oscillate
+    around the optimum (tanh-squash saturation excursions), which made a
+    point-in-time assertion flaky.  lr 0.002 + a 50-iteration window is
+    stable across the FIXED SEED LIST [0, 1, 2] (window error 0.02-0.06
+    vs the 0.15 bound); the list is part of the regression contract —
+    when retuning hyper-parameters, re-verify ALL THREE seeds rather than
+    shrinking the list, or the pre-PR-2 flake comes back.
+    """
     from repro.rl import networks as N
     cfg = a2c.A2CConfig(state_dim=4, action_dim=1, lr_actor=0.002,
                         lr_critic=0.01, entropy_coef=0.003)
-    agent = a2c.init(KEY, cfg)
-    rng = np.random.default_rng(0)
-    key = KEY
+    agent = a2c.init(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
     det_hist = []
     for it in range(400):
         s = rng.normal(size=(32, 4)).astype(np.float32)
@@ -44,7 +59,8 @@ def test_a2c_learns_threshold_bandit():
         det_hist.append(float(np.asarray(
             N.deterministic_action(mu)).mean()))
     trailing = float(np.mean(det_hist[-50:]))
-    assert abs(trailing - 0.7) < 0.15, (det_hist[0], det_hist[-1], trailing)
+    assert abs(trailing - 0.7) < 0.15, (seed, det_hist[0], det_hist[-1],
+                                        trailing)
 
 
 def test_sac_update_runs_and_targets_track():
@@ -67,6 +83,7 @@ def test_sac_update_runs_and_targets_track():
         assert np.isfinite(float(v))
 
 
+# --------------------------------------------------------------- replay
 def test_replay_buffer_wraps():
     buf = ReplayBuffer(8, 2, 1)
     for i in range(20):
@@ -77,17 +94,205 @@ def test_replay_buffer_wraps():
     assert (s["rewards"] >= 12).all()       # only recent entries survive
 
 
-@pytest.mark.slow
-def test_bilevel_trainer_runs_and_is_finite():
+@pytest.mark.parametrize("C", [1, 3, 8])
+def test_stacked_replay_matches_per_stream_buffers(C):
+    """Stream c of a StackedReplayBuffer is bit-identical — contents AND
+    sampling order under the shared seed — to a standalone
+    ``ReplayBuffer(..., seed=c)`` fed the same transitions, including
+    after wrap-around."""
+    cap, S, A = 16, 3, 2
+    stacked = StackedReplayBuffer(cap, C, S, A)
+    singles = [ReplayBuffer(cap, S, A, seed=c) for c in range(C)]
+    rng = np.random.default_rng(7)
+    for t in range(40):                              # 40 > cap: wraps
+        s = rng.normal(size=(C, S)).astype(np.float32)
+        a = rng.uniform(0, 1, size=(C, A)).astype(np.float32)
+        r = rng.normal(size=C).astype(np.float32)
+        s2 = rng.normal(size=(C, S)).astype(np.float32)
+        stacked.add_batch(s, a, r, s2, np.zeros(C))
+        for c in range(C):
+            singles[c].add(s[c], a[c], r[c], s2[c], False)
+        if t in (5, 20, 39):                         # interleave samples
+            got = stacked.sample(4)
+            for c in range(C):
+                want = singles[c].sample(4)
+                for k in want:
+                    np.testing.assert_array_equal(got[k][c], want[k], k)
+    assert len(stacked) == cap
+    np.testing.assert_array_equal(stacked.lens(), [cap] * C)
+
+
+# ------------------------------------------------- stacked agent parity
+@pytest.mark.parametrize("C", [1, 3, 8])
+def test_stacked_act_update_bit_exact_vs_per_stream(C):
+    """`act_stacked`/`update_stacked` (one vmapped dispatch for all C
+    agents) are bit-exact against C per-stream `act`/`update` calls on
+    the sliced agents — the micro-level parity the fused bilevel_step
+    builds on."""
+    cfg = a2c.A2CConfig(state_dim=10)
+    keys = jax.random.split(KEY, C)
+    stack = a2c.init_stacked(keys, cfg)
+    assert a2c.n_stacked(stack) == C
+    rng = np.random.default_rng(3)
+    states = jnp.asarray(rng.normal(size=(C, 10)).astype(np.float32))
+    klo = jax.random.split(jax.random.PRNGKey(5), C)
+
+    batched = np.asarray(a2c.act_stacked(klo, stack, states, True))
+    for c in range(C):
+        one = np.asarray(a2c.act(klo[c], a2c.slice_agent(stack, c),
+                                 states[c], True))
+        np.testing.assert_array_equal(batched[c], one)
+
+    B = 8
+    batch = {"states": rng.normal(size=(C, B, 10)).astype(np.float32),
+             "actions": rng.uniform(0.1, 0.9,
+                                    size=(C, B, 2)).astype(np.float32),
+             "rewards": rng.normal(size=(C, B)).astype(np.float32),
+             "next_states": rng.normal(size=(C, B, 10)).astype(np.float32),
+             "dones": np.zeros((C, B), np.float32)}
+    new_stack, logs = a2c.update_stacked(stack, batch, cfg)
+    for c in range(C):
+        want, wlog = a2c.update(a2c.slice_agent(stack, c),
+                                {k: v[c] for k, v in batch.items()}, cfg)
+        assert _tree_equal(a2c.slice_agent(new_stack, c), want)
+        for k in wlog:
+            np.testing.assert_array_equal(np.asarray(logs[k][c]),
+                                          np.asarray(wlog[k]), k)
+
+
+# ------------------------------------------------ bi-level trainer parity
+def _mk_trainer(C, seed=0, low_batch=4, detector=None, sac_minibatch=None,
+                **cfg_kwargs):
     from repro.core.bilevel import BiLevelTrainer
     from repro.sim.env import EnvConfig
     from repro.sim.video_source import paper_stream_mix
-    cfg = EnvConfig(streams=tuple(paper_stream_mix(2, 64, 96)),
-                    chunk_frames=4)
-    tr = BiLevelTrainer.create(cfg, seed=0)
+    cfg_kwargs.setdefault("chunk_frames", 4)
+    cfg = EnvConfig(streams=tuple(paper_stream_mix(C, 64, 96)),
+                    **cfg_kwargs)
+    tr = BiLevelTrainer.create(cfg, seed=seed, detector=detector,
+                               low_batch=low_batch)
+    if sac_minibatch is not None:   # paper minibatch 128 needs 128 chunks
+        import dataclasses
+        tr.controller.cfg = dataclasses.replace(tr.controller.cfg,
+                                                minibatch=sac_minibatch)
+    return tr
+
+
+def _run(tr, n, mode):
+    hist, logs = [], []
+    step = tr.run_chunk if mode == "stacked" else tr.run_chunk_loop
+    for _ in range(n):
+        m, results, info, lg = step()
+        hist.append(m)
+        logs.append(lg)
+    if mode == "stacked":
+        tr.flush()
+    return hist, logs
+
+
+@pytest.mark.parametrize("C", [1, 3, 8])
+def test_bilevel_stacked_vs_loop_bit_exact(C):
+    """THE tentpole contract: the single-jit ``bilevel_step`` path equals
+    the per-stream loop oracle bit-for-bit — every action, state and
+    reward written to replay (low_batch=4 engages the A2C update path
+    from chunk 4), the chunk metrics, and the post-update parameters of
+    all C agents after the deferred-update flush."""
+    n = 6
+    t_loop = _mk_trainer(C)
+    t_stack = _mk_trainer(C)
+    h_loop, _ = _run(t_loop, n, "loop")
+    h_stack, _ = _run(t_stack, n, "stacked")
+
+    assert h_loop == h_stack                      # metrics, exactly
+    for name in ("s", "a", "r", "s2"):            # replay = full history
+        np.testing.assert_array_equal(
+            getattr(t_loop.low_buffer, name),
+            getattr(t_stack.low_buffer, name), name)
+    assert _tree_equal(t_loop.low_stack, t_stack.low_stack)
+    assert _tree_equal(t_loop.controller.agent, t_stack.controller.agent)
+    np.testing.assert_array_equal(t_loop.controller.buffer.s,
+                                  t_stack.controller.buffer.s)
+    np.testing.assert_array_equal(t_loop.controller._current,
+                                  t_stack.controller._current)
+
+
+def test_bilevel_parity_across_controller_interval():
+    """The traced recompute/cached-proportions select stays exact across
+    a reallocation boundary (controller_interval=3 -> recompute fires at
+    t=0 and t=3 inside a 5-chunk run)."""
+    t_loop = _mk_trainer(2, controller_interval=3)
+    t_stack = _mk_trainer(2, controller_interval=3)
+    h_loop, _ = _run(t_loop, 5, "loop")
+    h_stack, _ = _run(t_stack, 5, "stacked")
+    assert h_loop == h_stack
+    assert _tree_equal(t_loop.low_stack, t_stack.low_stack)
+
+
+def test_bilevel_parity_with_sac_update_engaged():
+    """The fused SAC-update island (do_high) equals the oracle's
+    ``controller.train``: with the controller minibatch shrunk to 6 the
+    update engages at chunk 5 of an 8-chunk run (the paper's 128 would
+    need 128 chunks), covering the inlined ``sac._update``, the
+    ``pend['k_tr']`` routing, and the controller-buffer sampling order."""
+    t_loop = _mk_trainer(2, sac_minibatch=6)
+    t_stack = _mk_trainer(2, sac_minibatch=6)
+    h_loop, _ = _run(t_loop, 8, "loop")
+    h_stack, _ = _run(t_stack, 8, "stacked")
+    assert t_loop.controller.updates >= 2      # the island really ran
+    assert t_loop.controller.updates == t_stack.controller.updates
+    assert h_loop == h_stack
+    assert _tree_equal(t_loop.controller.agent, t_stack.controller.agent)
+    assert _tree_equal(t_loop.low_stack, t_stack.low_stack)
+
+
+def test_bilevel_mode_mixing_flushes_pending():
+    """Switching fused -> loop on one trainer applies the deferred update
+    first, so a mixed run equals a pure loop run of the same length."""
+    t_mixed = _mk_trainer(2, seed=3)
+    t_pure = _mk_trainer(2, seed=3)
+    for _ in range(6):
+        t_pure.run_chunk_loop()
+    for _ in range(5):                     # chunk 4 defers chunk 4's
+        t_mixed.run_chunk()                # update (low_batch=4)...
+    assert t_mixed._pending and t_mixed._pending["do_low"]
+    t_mixed.run_chunk_loop()               # ...flushed on mode switch
+    assert _tree_equal(t_pure.low_stack, t_mixed.low_stack)
+    np.testing.assert_array_equal(t_pure.low_buffer.a, t_mixed.low_buffer.a)
+
+
+def test_bilevel_seeded_determinism():
+    """Two fused runs from the same seed produce IDENTICAL chunk logs —
+    catches host-side RNG leaks / dict-ordering nondeterminism in the
+    stacked refactor (metrics, train logs, and replay contents all
+    compare exactly)."""
+    a_hist, a_logs = _run(_mk_trainer(3, seed=11), 6, "stacked")
+    b_hist, b_logs = _run(_mk_trainer(3, seed=11), 6, "stacked")
+    assert a_hist == b_hist
+    assert a_logs == b_logs
+
+
+@pytest.mark.slow
+def test_bilevel_trainer_runs_and_is_finite():
+    tr = _mk_trainer(2, low_batch=32)
     hist = tr.train_steps(4)
     assert len(hist) == 4
     for m in hist:
         assert 0.0 <= m["mean_acc"] <= 1.0
         assert np.isfinite(m["reward_min"])
         assert 0.0 <= m["jain"] <= 1.0
+
+
+@pytest.mark.slow
+def test_bilevel_stacked_composes_with_detector_backend():
+    """The fused control plane drives the real-detector env (one
+    ``roundtrip_padded_batched`` dispatch per signature group) and stays
+    bit-exact vs the loop oracle there too."""
+    from repro.models import detection as D
+    det_cfg = D.TinyDetectorConfig()
+    det = (D.init(jax.random.PRNGKey(1), det_cfg), det_cfg)
+    t_loop = _mk_trainer(2, accuracy_backend="detector", detector=det)
+    t_stack = _mk_trainer(2, accuracy_backend="detector", detector=det)
+    h_loop, _ = _run(t_loop, 2, "loop")
+    h_stack, _ = _run(t_stack, 2, "stacked")
+    assert h_loop == h_stack
+    np.testing.assert_array_equal(t_loop.low_buffer.a, t_stack.low_buffer.a)
