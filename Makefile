@@ -10,8 +10,8 @@ PY ?= python
 MD_ENV = XLA_FLAGS=--xla_force_host_platform_device_count=4 \
          JAX_PLATFORMS=cpu BISWIFT_FORCED_MULTIDEVICE=4
 
-.PHONY: lint test test-codec test-multidevice bench bench-smoke \
-	bench-multidevice
+.PHONY: lint test test-codec test-chaos test-multidevice bench \
+	bench-smoke bench-chaos bench-multidevice
 
 # first CI gate (the CI lint job runs exactly this target).  ruff check
 # blocks; the formatter check is non-blocking (leading -) until a
@@ -33,6 +33,11 @@ test-codec:
 		tests/test_codec_golden.py tests/test_fused_encoder.py \
 		tests/test_fused_pipeline.py tests/test_kernels.py
 
+# chaos/robustness net: fault-schedule semantics + closed-loop soak
+test-chaos:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_faults.py \
+		tests/test_chaos.py tests/test_serving.py
+
 test-multidevice:
 	$(MD_ENV) PYTHONPATH=src $(PY) -m pytest -x -q
 
@@ -43,6 +48,12 @@ bench:
 # timing noise (the CI bench-smoke job)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --smoke
+
+# seeded chaos soak over every preset fault schedule; exits non-zero on
+# any accounting leak, queue leak, or missed fps recovery (the CI
+# chaos-smoke job runs this and uploads BENCH_chaos.json)
+bench-chaos:
+	PYTHONPATH=src $(PY) -m benchmarks.chaos --smoke
 
 bench-multidevice:
 	PYTHONPATH=src $(PY) -m benchmarks.run --multidevice

@@ -1,0 +1,105 @@
+"""Chaos soak benchmark: ``PYTHONPATH=src python -m benchmarks.chaos``.
+
+Runs the closed-loop chaos soak (``repro.serving.faults.run_soak``) under
+every preset fault schedule and writes ``BENCH_chaos.json`` — the
+machine-readable robustness trajectory alongside ``BENCH_pipeline.json``:
+per-preset wall time, accounting verdicts, recovery verdicts (did
+steady-state fps come back within K chunks of each fault clearing), and
+the aggregated degradation-ladder counters (retries, demotions, forced
+reuse, frame skips, evictions, hedges).
+
+``--smoke`` / ``BISWIFT_BENCH_SMOKE=1`` (CI chaos-smoke job) shrinks the
+soak to the minimum preset horizon — every fault kind still fires, every
+invariant is still checked, and a violated invariant exits non-zero so
+the job gates.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+BENCH_JSON = os.environ.get("BENCH_CHAOS_JSON", "BENCH_chaos.json")
+SMOKE = os.environ.get("BISWIFT_BENCH_SMOKE") == "1"
+
+
+def _preset_report(name: str, n_chunks: int, seed: int) -> dict:
+    from repro.serving.faults import SoakConfig, preset_schedule, run_soak
+    n_shards = 2 if name == "shard-chaos" else 1
+    cfg = SoakConfig(n_chunks=n_chunks, n_streams=3, chunk_frames=3,
+                     n_shards=n_shards, seed=seed)
+    sched = preset_schedule(name, n_chunks=n_chunks, n_streams=3,
+                            n_shards=n_shards, seed=seed)
+    rep = run_soak(cfg, sched)
+    recovery = rep["recovery"] + rep["recovery_infer"]
+    checked = [r for r in recovery if r["ok"] is not None]
+    ladder = {k: int(sum(s[k] for s in rep["stream_stats"].values()))
+              for k in ("retries", "deadline_misses", "demote_events",
+                        "promote_events", "reuse_fallback_chunks",
+                        "frames_skipped", "chunks_lost", "chunks_corrupt",
+                        "chunks_stalled")}
+    return {
+        "preset": name,
+        "n_chunks": n_chunks,
+        "n_shards": n_shards,
+        "wall_s": round(rep["wall_s"], 3),
+        "accounting_ok": bool(rep["accounting_ok"]),
+        "queue_leaks": len(rep["queue_leaks"]),
+        "recovery_checked": len(checked),
+        "recovery_ok": all(r["ok"] for r in checked),
+        "mean_fps_norm": round(float(np.mean(rep["fps_norm"])), 2),
+        "mean_infer_norm": round(float(np.mean(rep["infer_norm"])), 2),
+        "evictions": sum(a == "evict" for _, a, _ in rep["fault_log"]),
+        "recoveries": sum(a == "recover" for _, a, _ in rep["fault_log"]),
+        "hedged_dispatches": int(rep["hedged_dispatches"]),
+        "ladder": ladder,
+    }
+
+
+def main() -> None:
+    global SMOKE
+    if "--smoke" in sys.argv:
+        SMOKE = True
+        os.environ["BISWIFT_BENCH_SMOKE"] = "1"
+    from repro.serving.faults import PRESETS
+    n_chunks = 12 if SMOKE else 24
+    t0 = time.time()
+    reports, errors = [], []
+    print("preset,wall_s,accounting_ok,recovery_ok,evictions,hedges")
+    for name in PRESETS:
+        try:
+            rep = _preset_report(name, n_chunks, seed=7)
+        except Exception as e:  # keep the harness robust, gate on smoke
+            errors.append(f"{name}: {type(e).__name__}: {e}")
+            print(f"{name},-1,ERROR,ERROR,0,0")
+            continue
+        reports.append(rep)
+        print(f"{rep['preset']},{rep['wall_s']},{rep['accounting_ok']},"
+              f"{rep['recovery_ok']},{rep['evictions']},"
+              f"{rep['hedged_dispatches']}")
+        if not rep["accounting_ok"]:
+            errors.append(f"{name}: accounting leak")
+        if rep["queue_leaks"]:
+            errors.append(f"{name}: {rep['queue_leaks']} queue leaks")
+        if not rep["recovery_ok"]:
+            errors.append(f"{name}: fps did not recover within K chunks")
+    payload = {
+        "schema": "biswift-chaos-v1",
+        "smoke": SMOKE,
+        "wall_s": round(time.time() - t0, 2),
+        "presets": reports,
+        "errors": errors,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {BENCH_JSON} ({len(reports)} presets, "
+          f"{time.time() - t0:.1f}s)")
+    if errors:
+        sys.exit("# chaos soak FAILED: " + "; ".join(errors))
+
+
+if __name__ == "__main__":
+    main()

@@ -58,8 +58,8 @@ def _normalize_features(enc):
 
 
 def encode_hybrid(raw_frames, bw_kbps: float, tr1: float, tr2: float,
-                  fps: float = 30.0, codec_overrides: dict | None = None
-                  ) -> HybridPacket:
+                  fps: float = 30.0, codec_overrides: dict | None = None,
+                  level: int | None = None) -> HybridPacket:
     """raw_frames: (T, H, W) [0..255] numpy/jax array.
 
     Host-level orchestration (anchor count is data-dependent); all inner
@@ -67,13 +67,20 @@ def encode_hybrid(raw_frames, bw_kbps: float, tr1: float, tr2: float,
     ``codec_overrides`` replaces VideoCodecConfig fields — e.g.
     ``{"use_kernel": True}`` routes the P-frame search through the Pallas
     kernel, ``{"dtype": "bfloat16"}`` selects the bf16 search variant.
+    ``level`` pins the ladder rung instead of deriving it from bandwidth —
+    the degradation ladder (``repro.serving.runtime``) uses this to demote
+    a struggling stream below what its allocation would normally buy.
     """
     raw_frames = jnp.asarray(raw_frames, f32)
     T, H, W = raw_frames.shape
     budget_bits = bw_kbps * 1000.0 * (T / fps)
 
     # 1) ladder selection with headroom reserved for anchors (~35%)
-    level = ladder_for_bandwidth(video_bandwidth_share(bw_kbps))
+    if level is None:
+        level = ladder_for_bandwidth(video_bandwidth_share(bw_kbps))
+    elif not 0 <= level < len(QUALITY_LADDER):
+        raise ValueError(f"ladder level {level} outside "
+                         f"[0, {len(QUALITY_LADDER)})")
     ql = QUALITY_LADDER[level]
     frames_lr = downscale(raw_frames, ql.scale)
     cfg = VideoCodecConfig(quality=ql.quality)

@@ -3,7 +3,9 @@
 ``ElasticPool`` tracks healthy device groups; on failure/eviction it
 rebuilds the mesh from survivors and re-shards the model (restore path in
 train/checkpoint.py does the same for training).  On CPU we exercise the
-logic with host-platform fake devices in tests.
+logic with host-platform fake devices in tests; the forced-4-device child
+proves the evict → remesh → re-dispatch path bit-exact for surviving
+streams (``tests/test_chaos.py``).
 """
 from __future__ import annotations
 
@@ -17,27 +19,55 @@ from repro.distributed.sharding import make_axis_rules
 
 @dataclasses.dataclass
 class ElasticPool:
-    n_groups: int                     # replica groups (e.g. data-axis rows)
-    healthy: np.ndarray = None
+    """Health bitmap over replica groups (e.g. data-axis rows).
+
+    ``healthy`` defaults to all-True; a caller-provided array is coerced
+    to a bool copy (so external mutation can't corrupt the pool) and must
+    have exactly ``n_groups`` entries.
+    """
+    n_groups: int
+    healthy: np.ndarray | None = None
 
     def __post_init__(self):
+        if self.n_groups < 1:
+            raise ValueError(f"n_groups must be >= 1, got {self.n_groups}")
         if self.healthy is None:
             self.healthy = np.ones(self.n_groups, bool)
+        else:
+            h = np.asarray(self.healthy)
+            if h.shape != (self.n_groups,):
+                raise ValueError(
+                    f"healthy must have shape ({self.n_groups},), "
+                    f"got {h.shape}")
+            self.healthy = h.astype(bool, copy=True)
+
+    def _check(self, group: int):
+        if not 0 <= group < self.n_groups:
+            raise IndexError(
+                f"group {group} outside pool of {self.n_groups}")
 
     def fail(self, group: int):
+        self._check(group)
         self.healthy[group] = False
 
     def recover(self, group: int):
+        self._check(group)
         self.healthy[group] = True
 
     @property
     def n_healthy(self) -> int:
         return int(self.healthy.sum())
 
+    def healthy_groups(self) -> list[int]:
+        return [int(g) for g in np.nonzero(self.healthy)[0]]
+
     def usable_power_of_two(self) -> int:
         """Largest power-of-two group count <= healthy (mesh axes like
-        powers of two; spares idle until enough recover)."""
+        powers of two; spares idle until enough recover).  0 when no
+        group is healthy."""
         n = self.n_healthy
+        if n == 0:
+            return 0
         p = 1
         while p * 2 <= n:
             p *= 2
@@ -45,11 +75,38 @@ class ElasticPool:
 
 
 def remesh(pool: ElasticPool, n_model: int = 1):
-    """Build the largest viable (data, model) mesh from healthy groups."""
-    n_devices = len(jax.devices())
-    n_data = min(pool.usable_power_of_two(), n_devices // n_model)
-    mesh = jax.make_mesh((n_data, n_model), ("data", "model"))
-    return mesh
+    """Build the largest viable (data, model) mesh from healthy groups.
+
+    When the process's devices split evenly across the pool's groups,
+    the mesh is built from the surviving groups' devices specifically
+    (an evicted group's device really leaves the mesh); otherwise the
+    groups are logical and the mesh just shrinks its data axis.
+
+    Raises ``RuntimeError`` instead of silently producing a 0-sized mesh
+    when too few healthy groups remain to place even one model replica.
+    """
+    if n_model < 1:
+        raise ValueError(f"n_model must be >= 1, got {n_model}")
+    devices = jax.devices()
+    usable = pool.usable_power_of_two()
+    if usable == 0:
+        raise RuntimeError(
+            f"cannot remesh: 0 of {pool.n_groups} groups healthy")
+    if len(devices) % pool.n_groups == 0 and pool.n_healthy < pool.n_groups:
+        per = len(devices) // pool.n_groups
+        sel = [d for g in pool.healthy_groups()
+               for d in devices[g * per:(g + 1) * per]]
+    else:
+        sel = list(devices)
+    n_data = min(usable, len(sel) // n_model)
+    if n_data < 1:
+        raise RuntimeError(
+            f"cannot remesh: {len(sel)} usable device(s) across "
+            f"{pool.n_healthy}/{pool.n_groups} healthy groups cannot "
+            f"host n_model={n_model}")
+    sel = np.asarray(sel[:n_data * n_model], dtype=object)
+    return jax.sharding.Mesh(sel.reshape(n_data, n_model),
+                             ("data", "model"))
 
 
 def reshard_params(params, specs_tree, mesh, multi_pod: bool = False):

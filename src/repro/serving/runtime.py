@@ -4,6 +4,25 @@ Binds the hybrid decoder's three pipelines to the scheduler's queues and a
 (pjit-able) detector, per chunk per stream.  This is the deployable analog
 of the paper's Fig. 4 right half; benchmarks/throughput.py drives it with
 1..N concurrent streams to reproduce Fig. 11(a).
+
+Robustness plane (chaos PR): when constructed with ``faults=`` (a
+``repro.serving.faults.FaultSchedule``) the runtime additionally runs
+
+  * a per-stream deadline-driven **degradation ladder** replacing silent
+    deferral — lost/corrupt chunks retry with exponential backoff; streams
+    that keep missing their deadline are demoted down the bitrate ladder
+    (``suggest_level``), then forced onto pipeline-③ reuse, then
+    frame-skipped with explicit accounting (types == 0).  Every decision
+    lands in ``stats[stream]`` (a :class:`StreamStats`).
+  * **straggler eviction + elastic recovery** — per-dispatch shard
+    timings feed a ``StragglerDetector``; ``poll_faults`` evicts flagged
+    shards from ``active_shards`` (re-homing queued requests onto
+    survivors via ``PipelineQueues.remap_shards``) and re-admits them when
+    the schedule says the device is healthy again.  Dispatches hedge
+    across active shards through a ``HedgedExecutor``.
+
+The accounting invariant every chaos test asserts:
+``frames_in == frames_inferred + frames_reused + frames_skipped``.
 """
 from __future__ import annotations
 
@@ -16,11 +35,14 @@ import jax.numpy as jnp
 from repro.core.hybrid_encoder import HybridPacket
 from repro.core.hybrid_decoder import (PipelineCosts, _upscale_mvs,
                                        pipeline_cost)
-from repro.codec.rate_model import upscale_nearest
+from repro.codec.rate_model import QUALITY_LADDER, upscale_nearest
 from repro.core.reuse import reuse_chunk
 from repro.models import detection as D
+from repro.serving.elastic import ElasticPool
 from repro.serving.scheduler import (AdmissionController, InferRequest,
                                      PipelineQueues, ServingConfig)
+from repro.serving.straggler import (DetectorConfig, HedgeConfig,
+                                     HedgedExecutor, StragglerDetector)
 
 f32 = np.float32
 
@@ -31,17 +53,90 @@ class StreamState:
     last_scores: np.ndarray
 
 
+@dataclasses.dataclass(frozen=True)
+class DegradeConfig:
+    """Deadline ladder knobs (rungs in escalation order).
+
+    1. retry-with-backoff — a lost/corrupt chunk is retransmitted up to
+       ``max_retries`` times, backoff doubling from ``retry_backoff_s``,
+       while the accumulated penalty still fits ``deadline_s``;
+    2. rung demotion — ``demote_patience`` consecutive deadline misses
+       drop the stream one bitrate-ladder rung (down to ``max_demotion``
+       below its bandwidth-derived rung);
+    3. pipeline-③ fallback — misses at the bottom rung force whole chunks
+       onto motion-vector reuse (no inference);
+    4. frame-skip — an undeliverable chunk with no carried detections is
+       dropped with explicit accounting (types == 0).
+
+    ``promote_patience`` consecutive on-deadline chunks walk the stream
+    back up one step (reuse → inference, then rung by rung).
+    """
+    deadline_s: float = 1.0
+    max_retries: int = 3
+    retry_backoff_s: float = 0.05
+    demote_patience: int = 2
+    promote_patience: int = 3
+    max_demotion: int = len(QUALITY_LADDER) - 1
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Per-stream degradation accounting — every ladder decision is
+    surfaced here, nothing is silent."""
+    stream: int
+    frames_in: int = 0
+    frames_inferred: int = 0          # pipelines ① and ② (through the DNN)
+    frames_reused: int = 0            # pipeline ③
+    frames_skipped: int = 0           # rung 4: explicitly dropped
+    chunks: int = 0
+    chunks_lost: int = 0
+    chunks_corrupt: int = 0
+    chunks_stalled: int = 0
+    retries: int = 0
+    deadline_misses: int = 0
+    rung_demotion: int = 0            # current ladder demotion (0 = none)
+    demote_events: int = 0
+    promote_events: int = 0
+    reuse_fallback_chunks: int = 0
+    force_reuse: bool = False         # rung 3 engaged
+    events: list = dataclasses.field(default_factory=list)
+    # transient per-chunk fields (the soak reads them right after a chunk)
+    last_penalty_s: float = 0.0
+    last_transmitted: bool = True
+    last_delivered: int = 0
+    last_inferred: int = 0
+    last_skipped: int = 0
+    _miss_streak: int = 0
+    _ok_streak: int = 0
+
+    def note(self, t: int, action: str, detail: str = ""):
+        self.events.append((int(t), action, detail))
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["events"] = [list(e) for e in d["events"]]
+        return {k: v for k, v in d.items() if not k.startswith("_")}
+
+
 class EdgeRuntime:
     def __init__(self, cfg: ServingConfig, detector_params, det_cfg,
                  costs: PipelineCosts = PipelineCosts(), *,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None, faults=None,
+                 degrade: DegradeConfig | None = None,
+                 hedge: HedgeConfig | None = None,
+                 straggler_cfg: DetectorConfig | None = None):
         """``mesh``/``rules`` (jax Mesh + AxisRules with a "stream" entry)
         switch the runtime to sharded mode: n_shards is derived from the
         mesh's stream extent, streams map to shards round-robin, each
         chunk's detector dispatch drains only its own shard's queues, and
         shard i's detector (params replicated per shard) is COMMITTED to
         mesh device i — the per-shard capacity slice corresponds to a real
-        device, not an accounting fiction."""
+        device, not an accounting fiction.
+
+        ``faults`` (a ``FaultSchedule``) arms the chaos plane: the
+        degradation ladder (``degrade``), hedged dispatch (``hedge``) and
+        straggler eviction (``straggler_cfg``) all activate; without it
+        the runtime behaves exactly as before (stats still collected)."""
         if (mesh is None) != (rules is None):
             raise ValueError("sharded mode needs BOTH mesh= and rules= "
                              "(got only one)")
@@ -80,17 +175,185 @@ class EdgeRuntime:
         self.demoted_frames = np.zeros(self.n_shards, np.int64)
         self.reuse_fallback_chunks = np.zeros(self.n_shards, np.int64)
 
+        # ---------------------------------------------- robustness plane
+        self.faults = faults
+        self.degrade = degrade or DegradeConfig(
+            deadline_s=cfg.latency_budget)
+        self.stats: dict[int, StreamStats] = {}
+        self.active_shards: list[int] = list(range(self.n_shards))
+        self.pool = ElasticPool(self.n_shards)
+        self.straggler = StragglerDetector(
+            straggler_cfg or DetectorConfig(), self.n_shards)
+        self._hedge_cfg = hedge or HedgeConfig()
+        self._hedge: HedgedExecutor | None = None
+        if self.n_shards > 1 and (faults is not None or hedge is not None):
+            self._rebuild_hedge()
+        self.fault_log: list[tuple[int, str, str]] = []
+        self._t = 0
+
+    # ------------------------------------------------------------------
     def stream_shard(self, stream: int) -> int:
-        return stream % self.n_shards
+        """Owning shard for a stream — round-robin over the CURRENTLY
+        active shards, so eviction re-homes streams onto survivors."""
+        return self.active_shards[stream % len(self.active_shards)]
+
+    def _shard_fn(self, shard: int):
+        return self._infer if self._shard_infer is None \
+            else self._shard_infer[shard]
+
+    def _rebuild_hedge(self):
+        old = self._hedge
+        self._hedge = HedgedExecutor(
+            self._hedge_cfg,
+            [self._shard_fn(s) for s in self.active_shards])
+        if old is not None:
+            self._hedge.lat.extend(old.lat)
+            self._hedge.hedges = old.hedges
+            old.close()
+
+    @property
+    def hedged_dispatches(self) -> int:
+        return 0 if self._hedge is None else self._hedge.hedges
 
     def _infer_batch(self, frames, shard=None):
         """Shard-aware detector dispatch: in sharded mode the batch runs
         on the shard's own committed device (jit follows the committed
-        params); otherwise on the single default-device detector."""
+        params); otherwise on the single default-device detector.  With a
+        fault schedule armed, the dispatch's simulated step time (base
+        cost × the schedule's shard slowdown) feeds the straggler
+        detector, and the call hedges across active shards when the
+        primary would blow the latency-quantile deadline."""
+        if shard is not None and self.faults is not None:
+            base = len(frames) / max(self.cfg.shard_capacity_fps, 1e-6)
+            slow = self.faults.shard_slowdown(shard, self._t)
+            self.straggler.record(shard, base * slow)
+            if self._hedge is not None and len(self.active_shards) > 1 \
+                    and shard in self.active_shards:
+                idx = self.active_shards.index(shard)
+
+                def sim(i):
+                    return base * self.faults.shard_slowdown(
+                        self.active_shards[i], self._t)
+
+                out, _ = self._hedge.run(jnp.asarray(frames),
+                                         simulate_latency=sim, primary=idx)
+                boxes, scores = out
+                return list(zip(np.asarray(boxes), np.asarray(scores)))
         fn = self._infer if (shard is None or self._shard_infer is None) \
             else self._shard_infer[shard]
         boxes, scores = fn(jnp.asarray(frames))
         return list(zip(np.asarray(boxes), np.asarray(scores)))
+
+    # ------------------------------------------------- degradation ladder
+    def _stats(self, stream: int) -> StreamStats:
+        if stream not in self.stats:
+            self.stats[stream] = StreamStats(stream)
+        return self.stats[stream]
+
+    def suggest_level(self, stream: int, base_level: int) -> int:
+        """Ladder rung the stream should encode at: its bandwidth-derived
+        rung minus any deadline-driven demotion (rung 2)."""
+        st = self._stats(stream)
+        return max(int(base_level) - st.rung_demotion, 0)
+
+    def note_stall(self, stream: int, t: int):
+        st = self._stats(stream)
+        st.chunks_stalled += 1
+        st.note(t, "stall", "camera produced no chunk")
+
+    def note_chunk_latency(self, stream: int, t: int, latency_s: float):
+        """Feed one chunk's end-to-end latency into the ladder controller:
+        consecutive deadline misses demote (rung 2) then force reuse
+        (rung 3); consecutive on-deadline chunks walk back up."""
+        st = self._stats(stream)
+        d = self.degrade
+        if latency_s > d.deadline_s:
+            st.deadline_misses += 1
+            st._miss_streak += 1
+            st._ok_streak = 0
+            if st._miss_streak >= d.demote_patience:
+                st._miss_streak = 0
+                if st.rung_demotion < d.max_demotion:
+                    st.rung_demotion += 1
+                    st.demote_events += 1
+                    st.note(t, "demote",
+                            f"latency {latency_s:.3f}s > deadline; "
+                            f"rung -{st.rung_demotion}")
+                elif not st.force_reuse:
+                    st.force_reuse = True
+                    st.note(t, "force_reuse",
+                            "bottom rung still missing deadline")
+        else:
+            st._ok_streak += 1
+            st._miss_streak = 0
+            if st._ok_streak >= d.promote_patience:
+                st._ok_streak = 0
+                if st.force_reuse:
+                    st.force_reuse = False
+                    st.note(t, "resume_infer", "deadline met; leaving "
+                            "pipeline-3 fallback")
+                elif st.rung_demotion > 0:
+                    st.rung_demotion -= 1
+                    st.promote_events += 1
+                    st.note(t, "promote", f"rung -{st.rung_demotion}")
+
+    def _deliver(self, stream: int, t: int) -> bool:
+        """Rung 1: was the chunk's payload delivered (possibly after
+        retries)?  Retransmissions traverse the same degraded link and
+        each backoff eats deadline budget; accumulated backoff is charged
+        to the chunk via ``last_penalty_s``."""
+        st = self.stats[stream]
+        f, d = self.faults, self.degrade
+        lost = f.chunk_lost(stream, t)
+        corrupt = f.chunk_corrupt(stream, t)
+        if not (lost or corrupt):
+            return True
+        if lost:
+            st.chunks_lost += 1
+        if corrupt:
+            st.chunks_corrupt += 1
+        penalty = 0.0
+        for attempt in range(d.max_retries):
+            backoff = d.retry_backoff_s * (2 ** attempt)
+            if penalty + backoff > d.deadline_s:
+                break
+            penalty += backoff
+            st.retries += 1
+            if f.retry_succeeds(stream, t, attempt):
+                st.last_penalty_s = penalty
+                st.note(t, "retry_ok",
+                        f"attempt {attempt + 1}, +{penalty:.3f}s")
+                return True
+        st.last_penalty_s = penalty
+        st.note(t, "retry_exhausted",
+                f"{'lost' if lost else 'corrupt'} chunk undeliverable")
+        return False
+
+    def _skip_chunk(self, stream: int, t: int, packet: HybridPacket):
+        """Rungs 3/4 for an undeliverable chunk: hold the previous
+        detections (zero-motion pipeline-③) when a carry exists, else
+        drop the chunk with explicit accounting (types == 0)."""
+        st = self.stats[stream]
+        T = packet.types.shape[0]
+        H, W = packet.anchor_hd.shape[1:]
+        n_cells = (H // self.det_cfg.stride) * (W // self.det_cfg.stride)
+        prev = self.streams.get(stream)
+        if prev is not None and prev.last_boxes.shape[0] == n_cells:
+            types = np.full(T, 3, packet.types.dtype)
+            boxes = np.repeat(prev.last_boxes[None], T, axis=0)
+            scores = np.repeat(prev.last_scores[None], T, axis=0)
+            st.frames_reused += T
+            st.reuse_fallback_chunks += 1
+            st.last_delivered = T
+            st.note(t, "reuse_hold",
+                    f"{T} frames held on carried detections")
+            return boxes.astype(f32), scores.astype(f32), types
+        types = np.zeros(T, packet.types.dtype)
+        st.frames_skipped += T
+        st.last_skipped = T
+        st.note(t, "frame_skip", f"{T} frames dropped (no carry)")
+        return (np.zeros((T, n_cells, 4), f32),
+                np.zeros((T, n_cells), f32), types)
 
     # ------------------------------------------------------------------
     def process_chunk(self, stream: int, t: int, packet: HybridPacket):
@@ -103,22 +366,49 @@ class EdgeRuntime:
         defers its streams to pipeline-③ reuse without stalling the other
         shards), and pipeline ③ carries the previous chunk's last
         detections across the chunk boundary.
+
+        With a fault schedule armed, the chunk first runs the delivery
+        ladder (loss/corruption → retries → reuse-hold/frame-skip) and a
+        stream in forced-reuse state routes the whole delivered chunk to
+        pipeline ③.  Returned ``types`` may then contain 0 (explicitly
+        skipped frames) alongside the usual 1/2/3.
         """
-        enc = packet.video
+        self._t = t
+        st = self._stats(stream)
         T = packet.types.shape[0]
+        st.chunks += 1
+        st.frames_in += T
+        st.last_penalty_s = 0.0
+        st.last_transmitted = True
+        st.last_delivered = st.last_inferred = st.last_skipped = 0
+
+        if self.faults is not None and not self._deliver(stream, t):
+            st.last_transmitted = False
+            return self._skip_chunk(stream, t, packet)
+
+        enc = packet.video
         H, W = packet.anchor_hd.shape[1:]
         types = packet.types.copy()
         prev = self.streams.get(stream)
         shard = self.stream_shard(stream)
 
+        if st.force_reuse and prev is not None:
+            # rung 3: ladder floor exhausted — whole chunk on pipeline ③
+            # with the packet's REAL motion vectors (payload did arrive)
+            types = np.full_like(types, 3)
+            st.reuse_fallback_chunks += 1
+            self.reuse_fallback_chunks[shard] += 1
+            st.note(t, "reuse_chunk", "forced pipeline-3 chunk")
+
         n_infer = int((types != 3).sum())
-        if not self.admission.admit_shard(self.queues.shard_depths, shard,
-                                          n_infer):
+        if n_infer and not self.admission.admit_shard(
+                self.queues.shard_depths, shard, n_infer):
             # overload: demote transfer frames to reuse, keep chunk anchors
             self.demoted_frames[shard] += int((types == 2).sum())
             types = np.where(types == 2, 3, types)
             self.deferred += 1
             self.deferred_by_shard[shard] += 1
+            st.note(t, "defer", "shard overloaded; type-2 frames demoted")
             # deep overload: if even anchors-only blows the budget AND we
             # have carried detections to reuse, the whole chunk runs on
             # pipeline ③ (the previous chunk's boxes keep tracking via MVs)
@@ -129,6 +419,8 @@ class EdgeRuntime:
                 self.demoted_frames[shard] += int((types != 3).sum())
                 types = np.full_like(types, 3)
                 self.reuse_fallback_chunks[shard] += 1
+                st.reuse_fallback_chunks += 1
+                st.note(t, "reuse_chunk", "deep overload")
 
         mvs_hd = np.asarray(_upscale_mvs(enc.mv, (H, W)))
 
@@ -166,7 +458,58 @@ class EdgeRuntime:
                                     init_boxes=init_b, init_scores=init_s)
         self.streams[stream] = StreamState(last_boxes=np.asarray(boxes[-1]),
                                            last_scores=np.asarray(scores[-1]))
+        n_inf = int(((types == 1) | (types == 2)).sum())
+        st.frames_inferred += n_inf
+        st.frames_reused += int((types == 3).sum())
+        st.last_inferred = n_inf
+        st.last_delivered = T
         return np.asarray(boxes), np.asarray(scores), types
+
+    # -------------------------------------------- eviction and recovery
+    def evict_shard(self, shard: int, t: int, reason: str = "straggler"):
+        """Remove a shard from service: queued requests re-home onto
+        survivor shards and future ``stream_shard`` routing skips it.
+        The LAST shard is never evicted (the plane degrades, it does not
+        abandon admitted streams)."""
+        if shard not in self.active_shards or len(self.active_shards) <= 1:
+            return False
+        self.pool.fail(shard)
+        self.active_shards.remove(shard)
+        moved = self.queues.remap_shards(self.stream_shard)
+        self.straggler.reset(shard)
+        if self._hedge is not None:
+            self._rebuild_hedge()
+        self.fault_log.append(
+            (int(t), "evict",
+             f"shard {shard} ({reason}); {moved} queued requests re-homed; "
+             f"survivors {self.active_shards}"))
+        return True
+
+    def recover_shard(self, shard: int, t: int):
+        if shard in self.active_shards or not 0 <= shard < self.n_shards:
+            return False
+        self.pool.recover(shard)
+        self.active_shards = sorted(self.active_shards + [shard])
+        self.straggler.reset(shard)
+        if self._hedge is not None:
+            self._rebuild_hedge()
+        self.fault_log.append(
+            (int(t), "recover",
+             f"shard {shard} re-admitted; active {self.active_shards}"))
+        return True
+
+    def poll_faults(self, t: int):
+        """Once-per-chunk control step: evict shards the straggler
+        detector flags; re-admit evicted shards once the fault schedule
+        reports them healthy (slowdown back to 1.0)."""
+        self._t = t
+        for shard in self.straggler.flagged():
+            self.evict_shard(shard, t)
+        if self.faults is not None:
+            for g in range(self.n_shards):
+                if g not in self.active_shards and \
+                        self.faults.shard_slowdown(g, t) <= 1.0:
+                    self.recover_shard(g, t)
 
     # ------------------------------------------------------------------
     def compute_latency(self, types: np.ndarray, bits: float,

@@ -126,6 +126,21 @@ class PipelineQueues:
             outs = self.infer_fn(frames)[:n]
         return list(zip(batch, outs))
 
+    def remap_shards(self, mapper: Callable[[int], int]) -> int:
+        """Rewrite every queued request's owning shard via
+        ``mapper(stream) -> shard``.  Called after a shard eviction so
+        in-flight requests follow their streams onto the survivor shards
+        instead of waiting on a device that will never drain them.
+        Returns the number of requests whose shard changed."""
+        moved = 0
+        for q in (self.q1, self.q2):
+            for req in q:
+                new = int(mapper(req.stream))
+                if new != req.shard:
+                    req.shard = new
+                    moved += 1
+        return moved
+
     def drain(self, max_frames: Optional[int] = None):
         """Execute queued requests in batches (priority: ① then ②)."""
         done = []

@@ -119,8 +119,14 @@ def high_state_dim(cfg: EnvConfig) -> int:
 
 
 class MultiStreamEnv:
-    def __init__(self, cfg: EnvConfig, detector=None):
+    def __init__(self, cfg: EnvConfig, detector=None, faults=None):
+        """``faults`` (a ``repro.serving.faults.FaultSchedule``) arms the
+        chaos plane: bandwidth collapses/outages scale the trace, and
+        stream churn (leave/join) plus camera stalls mask streams out of
+        each step — offline streams get placeholder results and zero
+        allocation instead of silently consuming bandwidth."""
         self.cfg = cfg
+        self.faults = faults
         self.C = len(cfg.streams)
         self.trace = generate_trace(cfg.trace, 100_000)
         self.t = 0
@@ -167,7 +173,10 @@ class MultiStreamEnv:
         return self._chunks_for_step()[c]
 
     def total_bandwidth(self) -> float:
-        return float(self.trace[self.t % len(self.trace)])
+        bw = float(self.trace[self.t % len(self.trace)])
+        if self.faults is not None:
+            bw = max(bw * self.faults.bw_multiplier(self.t), 1.0)
+        return bw
 
     # ------------------------------------------------------------------
     def _low_features(self, frames) -> tuple:
@@ -230,16 +239,34 @@ class MultiStreamEnv:
         """
         cfg = self.cfg
         total_bw = self.total_bandwidth()
-        alloc = allocate(total_bw, proportions)
-        if cfg.accuracy_backend == "detector" and self.detector is not None:
-            results = self._run_streams_roundtrip(alloc, thresholds)
+        if self.faults is not None:
+            live = self.faults.active_mask(self.t, self.C)
+            stalled = np.asarray([self.faults.stalled(c, self.t)
+                                  for c in range(self.C)], bool)
         else:
-            results = []
+            live = np.ones(self.C, bool)
+            stalled = np.zeros(self.C, bool)
+        serve = live & ~stalled
+        # offline streams surrender their bandwidth share (allocate floors
+        # proportions at 1e-6, so their residual share is negligible)
+        props = np.where(live, np.asarray(proportions, np.float64), 0.0)
+        alloc = allocate(total_bw, props)
+        if cfg.accuracy_backend == "detector" and self.detector is not None:
+            results = self._run_streams_roundtrip(alloc, thresholds,
+                                                  serve=serve)
+        else:
+            results = [None] * self.C
             for c in range(self.C):
+                if not serve[c]:
+                    continue
                 frames, boxes, valid = self._chunk(c)
                 tr1, tr2 = float(thresholds[c, 0]), float(thresholds[c, 1])
-                results.append(self._run_stream(c, frames, boxes, valid,
-                                                alloc[c], tr1, tr2))
+                results[c] = self._run_stream(c, frames, boxes, valid,
+                                              alloc[c], tr1, tr2)
+        for c in range(self.C):
+            if results[c] is None:
+                results[c] = self._offline_result(c, alloc[c],
+                                                  bool(stalled[c]))
 
         # edge GPU queue dynamics, per mesh shard: each shard serves its
         # own slice of capacity, and a stream's queueing delay comes from
@@ -273,8 +300,21 @@ class MultiStreamEnv:
             [r["n_anchor"] / cfg.chunk_frames for r in results], f32)
         self.t += 1
         info = {"total_bw": total_bw, "alloc": alloc,
-                "queue_delay": queue_delay}
+                "queue_delay": queue_delay,
+                "active_mask": live, "stalled_mask": stalled}
         return results, info
+
+    def _offline_result(self, c: int, bw_kbps: float,
+                        stalled: bool) -> dict:
+        """Placeholder row for a stream that produced no chunk this step
+        (left the pool, hasn't joined yet, or its camera stalled) — keeps
+        results length C and makes absence explicit instead of silent."""
+        types = np.zeros(self.cfg.chunk_frames, np.int64)
+        return {"stream": c, "accuracy": 0.0, "latency": 0.0,
+                "t_trans": 0.0, "t_comp": 0.0, "bits": 0.0, "types": types,
+                "n_anchor": 0, "n_transfer": 0, "n_infer": 0,
+                "bw_kbps": float(bw_kbps), "utilization": 0.0,
+                "offline": not stalled, "stalled": stalled}
 
     # ------------------------------------------------------------------
     def _run_stream(self, c, frames, boxes, valid, bw_kbps, tr1, tr2):
@@ -342,7 +382,8 @@ class MultiStreamEnv:
                 fps=self.cfg.fps)
         return self._rt_cfg
 
-    def _run_streams_roundtrip(self, alloc, thresholds) -> list:
+    def _run_streams_roundtrip(self, alloc, thresholds,
+                               serve=None) -> list:
         """Detector backend: ONE fused round-trip dispatch per
         batch-signature group — source frames to HD detections without
         leaving the trace (``repro.core.roundtrip``), instead of the
@@ -369,6 +410,10 @@ class MultiStreamEnv:
         chunk_s = cfg.chunk_frames / cfg.fps
         results = [None] * self.C
         for sig, ids in group_by_signature(cfg.streams).items():
+            if serve is not None:
+                ids = [c for c in ids if serve[c]]
+                if not ids:
+                    continue
             H, W = sig[0], sig[1]
             hp, wp = full_lr_canvas(H, W)
             extents, quals = ladder_batch_arrays(

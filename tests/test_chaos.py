@@ -1,0 +1,407 @@
+"""Closed-loop chaos soaks + elastic eviction/recovery (ISSUE 6 tentpole).
+
+CPU tests drive ``run_soak`` across every preset fault schedule and assert
+the three chaos invariants: zero accounting leaks (frames in == inferred +
+reused + explicitly skipped), no queue leaks/deadlock, and post-fault fps
+recovery to >= 90% of the pre-fault steady state within K chunks.  The
+degradation-ladder unit tests exercise each rung (retry, demote, forced
+reuse, frame-skip) against crafted schedules.
+
+Like ``test_stream_sharding.py``, the eviction -> remesh -> re-dispatch
+path needs a real multi-device platform: a driver test re-runs this
+file's ``forced``-named tests in a subprocess with 4 fake CPU devices and
+proves the rebuilt-mesh round trip BIT-EXACT against the no-fault oracle
+for the surviving streams.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+import conftest
+from repro.serving.faults import (FaultEvent, FaultSchedule, PRESETS,
+                                  SoakConfig, preset_schedule, run_soak)
+
+_FORCED = int(os.environ.get(conftest.FORCED_MULTIDEVICE_ENV, "0"))
+
+forced_only = pytest.mark.skipif(
+    _FORCED < 4, reason="needs the forced multi-device child process")
+
+N_CHUNKS = 24
+_soak_cache: dict = {}
+
+
+def _soak(name: str):
+    """One soak per preset per session (they dominate this file's cost)."""
+    if name not in _soak_cache:
+        n_shards = 2 if name == "shard-chaos" else 1
+        cfg = SoakConfig(n_chunks=N_CHUNKS, n_streams=3, chunk_frames=3,
+                         n_shards=n_shards, seed=7)
+        sched = preset_schedule(name, n_chunks=N_CHUNKS, n_streams=3,
+                                n_shards=n_shards, seed=7)
+        _soak_cache[name] = (cfg, sched, run_soak(cfg, sched))
+    return _soak_cache[name]
+
+
+# ------------------------------------------------------------ chaos soaks
+@pytest.mark.parametrize("name", PRESETS)
+def test_soak_accounting_never_leaks(name):
+    """frames_in == frames_inferred + frames_reused + frames_skipped for
+    every stream, under every fault mix — degradation is explicit."""
+    _, _, rep = _soak(name)
+    assert rep["accounting_ok"]
+    for c, s in rep["stream_stats"].items():
+        assert s["frames_in"] == (s["frames_inferred"] + s["frames_reused"]
+                                  + s["frames_skipped"]), (name, c, s)
+        assert s["frames_in"] > 0
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_soak_no_queue_leaks_or_deadlock(name):
+    """The soak ran to completion (no deadlock) and no request was left
+    behind in a pipeline queue after any chunk."""
+    _, _, rep = _soak(name)
+    assert rep["n_chunks"] == N_CHUNKS
+    assert rep["queue_leaks"] == []
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_soak_recovers_steady_state_fps(name):
+    """Every checkable fault region recovers to >= recovery_frac of its
+    pre-fault baseline within K chunks of clearing — on both the
+    delivered-fps and inferred-fps (through-the-DNN) series."""
+    _, _, rep = _soak(name)
+    checked = 0
+    for series in ("recovery", "recovery_infer"):
+        for region in rep[series]:
+            if region["ok"] is not None:
+                assert region["ok"], (name, series, region)
+                checked += 1
+    assert checked > 0, f"{name}: no checkable fault region"
+
+
+def test_soak_is_deterministic():
+    cfg, sched, rep = _soak("loss-burst")
+    rep2 = run_soak(cfg, sched)
+    np.testing.assert_array_equal(rep["fps_norm"], rep2["fps_norm"])
+    np.testing.assert_array_equal(rep["infer_norm"], rep2["infer_norm"])
+    assert rep["stream_stats"] == rep2["stream_stats"]
+    assert rep["fault_log"] == rep2["fault_log"]
+
+
+def test_soak_ladder_engages_under_faults():
+    """The fault mixes actually exercise the ladder: outages cause
+    deadline misses and rung demotion (bw-collapse); loss bursts cause
+    retries, reuse-holds, and an explicit frame-skip (loss-burst)."""
+    _, _, bw = _soak("bw-collapse")
+    tot = {k: sum(s[k] for s in bw["stream_stats"].values())
+           for k in ("deadline_misses", "demote_events", "promote_events")}
+    assert tot["deadline_misses"] > 0 and tot["demote_events"] > 0
+    assert tot["promote_events"] > 0          # ...and walks back up
+
+    _, _, loss = _soak("loss-burst")
+    tot = {k: sum(s[k] for s in loss["stream_stats"].values())
+           for k in ("retries", "chunks_lost", "reuse_fallback_chunks",
+                     "frames_skipped")}
+    assert tot["retries"] > 0 and tot["chunks_lost"] > 0
+    assert tot["reuse_fallback_chunks"] > 0   # rung 3
+    assert tot["frames_skipped"] > 0          # rung 4 (pre-carry loss)
+    # every decision is surfaced as an event
+    assert any(e[1] == "retry_exhausted"
+               for s in loss["stream_stats"].values() for e in s["events"])
+    assert any(e[1] == "frame_skip"
+               for s in loss["stream_stats"].values() for e in s["events"])
+
+
+def test_soak_churn_masks_streams():
+    _, sched, rep = _soak("stream-churn")
+    tot_stall = sum(s["chunks_stalled"]
+                    for s in rep["stream_stats"].values())
+    assert tot_stall > 0
+    stats = rep["stream_stats"]
+    # the late joiner missed its pre-join chunks; the leaver missed its
+    # whole leave window (longer than any stall)
+    assert stats[2]["chunks"] == N_CHUNKS - 2
+    assert stats[1]["chunks"] < stats[0]["chunks"]
+    assert not sched.stream_active(2, 0) and sched.stream_active(2, 5)
+
+
+def test_soak_evicts_and_recovers_straggler_shard():
+    """shard-chaos: the slow shard is flagged, evicted (queued work
+    re-homed to survivors), then re-admitted once the slowdown clears —
+    without dropping a single admitted stream's accounting."""
+    _, _, rep = _soak("shard-chaos")
+    actions = [a for _, a, _ in rep["fault_log"]]
+    assert "evict" in actions and "recover" in actions
+    t_evict = next(t for t, a, _ in rep["fault_log"] if a == "evict")
+    t_rec = next(t for t, a, _ in rep["fault_log"] if a == "recover")
+    assert t_evict < t_rec
+    assert rep["active_shards_final"] == [0, 1]
+    assert rep["accounting_ok"]
+    assert rep["hedged_dispatches"] > 0       # hedging kicked in too
+
+
+# ------------------------------------------------- degradation ladder unit
+def _tiny_runtime(faults=None, degrade=None, n_streams=1, n_shards=1,
+                  **cfg_kw):
+    from repro.models import detection as D
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    cfg = ServingConfig(n_streams=n_streams, n_shards=n_shards, **cfg_kw)
+    return EdgeRuntime(cfg, params, det_cfg, faults=faults, degrade=degrade)
+
+
+def _packet(seed=0, T=3):
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.sim.video_source import StreamConfig, generate_chunk
+    frames, _, _ = generate_chunk(
+        None, StreamConfig(height=32, width=48, seed=seed), 0, T)
+    return encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+
+
+def test_ladder_demote_force_reuse_and_promote():
+    from repro.serving.runtime import DegradeConfig
+    rt = _tiny_runtime(degrade=DegradeConfig(
+        deadline_s=0.5, demote_patience=2, promote_patience=2,
+        max_demotion=1))
+    assert rt.suggest_level(0, 3) == 3
+    rt.note_chunk_latency(0, 0, 1.0)          # miss 1: no action yet
+    assert rt.stats[0].rung_demotion == 0
+    rt.note_chunk_latency(0, 1, 1.0)          # miss 2: demote
+    assert rt.stats[0].rung_demotion == 1
+    assert rt.suggest_level(0, 3) == 2
+    assert rt.suggest_level(0, 0) == 0        # never below the floor
+    rt.note_chunk_latency(0, 2, 1.0)
+    rt.note_chunk_latency(0, 3, 1.0)          # at max_demotion: rung 3
+    assert rt.stats[0].force_reuse
+    rt.note_chunk_latency(0, 4, 0.1)
+    rt.note_chunk_latency(0, 5, 0.1)          # recovery: leave reuse first
+    assert not rt.stats[0].force_reuse
+    assert rt.stats[0].rung_demotion == 1
+    rt.note_chunk_latency(0, 6, 0.1)
+    rt.note_chunk_latency(0, 7, 0.1)          # ...then promote the rung
+    assert rt.stats[0].rung_demotion == 0
+    st = rt.stats[0]
+    assert st.demote_events == 1 and st.promote_events == 1
+    assert st.deadline_misses == 4
+    acts = [a for _, a, _ in st.events]
+    assert acts == ["demote", "force_reuse", "resume_infer", "promote"]
+
+
+def test_lost_chunk_without_carry_frame_skips_with_accounting():
+    sched = FaultSchedule([FaultEvent("chunk_loss", 0, 1, magnitude=1.0)])
+    rt = _tiny_runtime(faults=sched)
+    pkt = _packet()
+    boxes, scores, types = rt.process_chunk(0, 0, pkt)
+    assert (types == 0).all()                 # explicitly dropped
+    assert float(np.abs(boxes).sum()) == 0.0
+    st = rt.stats[0]
+    assert st.frames_skipped == pkt.types.shape[0]
+    assert st.frames_in == st.frames_inferred + st.frames_reused \
+        + st.frames_skipped
+    assert not st.last_transmitted and st.retries > 0
+
+
+def test_lost_chunk_with_carry_holds_on_reuse():
+    sched = FaultSchedule([FaultEvent("chunk_loss", 1, 2, magnitude=1.0)])
+    rt = _tiny_runtime(faults=sched)
+    pkt = _packet()
+    b0, s0, t0 = rt.process_chunk(0, 0, pkt)      # clean chunk seeds carry
+    assert (t0 == pkt.types).all()
+    b1, _, t1 = rt.process_chunk(0, 1, pkt)       # lost chunk: hold
+    assert (t1 == 3).all()
+    np.testing.assert_array_equal(b1[0], b0[-1])  # zero-motion carry
+    np.testing.assert_array_equal(b1[-1], b0[-1])
+    st = rt.stats[0]
+    assert st.reuse_fallback_chunks == 1 and st.frames_skipped == 0
+    assert st.frames_in == st.frames_inferred + st.frames_reused
+
+
+def test_flaky_chunk_recovered_by_retry():
+    # magnitude 0 loss never triggers; 0.4 on a seeded schedule where the
+    # first coin loses but a retry wins: find such (seed, t) by scanning
+    sched = None
+    for seed in range(50):
+        s = FaultSchedule([FaultEvent("chunk_loss", 0, 1, magnitude=0.4)],
+                          seed=seed)
+        if s.chunk_lost(0, 0) and s.retry_succeeds(0, 0, 0):
+            sched = s
+            break
+    assert sched is not None
+    rt = _tiny_runtime(faults=sched)
+    pkt = _packet()
+    _, _, types = rt.process_chunk(0, 0, pkt)
+    st = rt.stats[0]
+    assert (types == pkt.types).all()         # delivered after retry
+    assert st.retries == 1 and st.last_penalty_s > 0.0
+    assert st.chunks_lost == 1 and st.frames_skipped == 0
+    assert any(a == "retry_ok" for _, a, _ in st.events)
+
+
+def test_forced_reuse_routes_delivered_chunks_to_pipeline3():
+    from repro.serving.runtime import DegradeConfig
+    rt = _tiny_runtime(faults=FaultSchedule([]), degrade=DegradeConfig(
+        deadline_s=0.5, demote_patience=1, max_demotion=0))
+    pkt = _packet()
+    rt.process_chunk(0, 0, pkt)               # seed the carry
+    rt.note_chunk_latency(0, 0, 2.0)          # max_demotion=0: straight
+    assert rt.stats[0].force_reuse            # to rung 3
+    _, _, types = rt.process_chunk(0, 1, pkt)
+    assert (types == 3).all()
+    assert rt.stats[0].reuse_fallback_chunks == 1
+
+
+def test_manual_evict_remaps_queued_requests_and_last_shard_guarded():
+    from repro.serving.scheduler import InferRequest
+    rt = _tiny_runtime(n_streams=4, n_shards=2)
+    frame = np.zeros((32, 48), np.float32)
+    rt.queues.submit(InferRequest(1, 0, 0, 1, frame, shard=1))
+    assert rt.evict_shard(1, t=0)
+    assert rt.active_shards == [0]
+    assert all(r.shard == 0 for r in rt.queues.q1)    # re-homed
+    assert rt.stream_shard(1) == 0
+    assert not rt.evict_shard(0, t=1)         # never evict the last shard
+    assert rt.recover_shard(1, t=2)
+    assert rt.active_shards == [0, 1]
+    assert not rt.recover_shard(1, t=3)       # already active: no-op
+
+
+# --------------------------------------------------- forced 4-device child
+def test_spawns_multidevice_child_suite():
+    """Driver: re-run ONLY this file's ``forced``-named tests under 4
+    forced CPU devices (see test_stream_sharding.py for the pattern)."""
+    if _FORCED:
+        pytest.skip("already inside the forced multi-device child")
+    r = conftest.forced_multidevice_run(
+        "tests/test_chaos.py", extra_args=["-k", "forced"])
+    assert r.returncode == 0, (
+        f"forced multi-device child failed\n--- stdout ---\n{r.stdout}"
+        f"\n--- stderr ---\n{r.stderr}")
+    assert "passed" in r.stdout
+
+
+def _roundtrip_fixtures(S=4, H=64, W=96, T=4):
+    import jax.numpy as jnp
+    from repro.core.roundtrip import RoundtripConfig
+    from repro.models import detection as D
+    from repro.sim.video_source import StreamConfig, generate_chunk
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    cfg = RoundtripConfig(level=3, det_cfg=det_cfg)
+    data = [generate_chunk(None, StreamConfig(height=H, width=W,
+                                              n_objects=3, seed=s), 0, T)
+            for s in range(S)]
+    raw = jnp.stack([d[0] for d in data])
+    gtb = jnp.stack([d[1] for d in data])
+    gtv = jnp.stack([d[2] for d in data])
+    sc = dict(tr1=jnp.full((S,), 0.05), tr2=jnp.full((S,), 0.1),
+              bw_kbps=jnp.asarray([6000.0, 3000.0, 1500.0, 8000.0][:S]),
+              queue_delay=jnp.zeros((S,)))
+    return raw, gtb, gtv, params, cfg, sc
+
+
+@forced_only
+def test_forced_eviction_remesh_roundtrip_bit_exact():
+    """The tentpole's elastic guarantee: kill a device group, rebuild the
+    mesh from survivors, re-dispatch the SAME streams — every surviving
+    stream's outputs are bit-exact vs the no-fault single-device oracle.
+    """
+    from repro.core.roundtrip import roundtrip_batched
+    from repro.distributed.sharding import SINGLE_POD_RULES
+    from repro.distributed.stream_sharding import shard_roundtrip
+    from repro.serving.elastic import ElasticPool, remesh
+
+    raw, gtb, gtv, params, cfg, sc = _roundtrip_fixtures()
+    ref = roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+
+    pool = ElasticPool(4)
+    mesh4 = remesh(pool)
+    assert mesh4.devices.size == 4
+    out4 = shard_roundtrip(mesh4, SINGLE_POD_RULES, cfg=cfg)(
+        raw, gtb, gtv, params, **sc)
+
+    pool.fail(3)                               # kill one device group
+    mesh2 = remesh(pool)                       # largest power of two: 2
+    assert mesh2.devices.size == 2
+    assert set(mesh2.devices.flat) < set(mesh4.devices.flat)
+    out2 = shard_roundtrip(mesh2, SINGLE_POD_RULES, cfg=cfg)(
+        raw, gtb, gtv, params, **sc)
+
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(out4[k]), np.asarray(ref[k]),
+            err_msg=f"pre-fault mesh diverged on {k!r}")
+        np.testing.assert_array_equal(
+            np.asarray(out2[k]), np.asarray(ref[k]),
+            err_msg=f"post-eviction mesh diverged on {k!r}")
+
+
+@forced_only
+def test_forced_remesh_respects_power_of_two_and_raises_when_empty():
+    from repro.serving.elastic import ElasticPool, remesh
+    pool = ElasticPool(4)
+    assert remesh(pool).shape["data"] == 4
+    pool.fail(0)
+    assert pool.usable_power_of_two() == 2
+    m = remesh(pool)
+    assert m.shape["data"] == 2
+    devs = list(m.devices.flat)
+    assert jax.devices()[0] not in devs        # failed group really left
+    for g in (1, 2, 3):
+        pool.fail(g)
+    with pytest.raises(RuntimeError, match="0 of 4 groups healthy"):
+        remesh(pool)
+
+
+@forced_only
+def test_forced_reshard_params_preserves_values():
+    """Post-failure parameter migration: device_put onto the rebuilt mesh
+    keeps every weight bit-identical."""
+    import jax.numpy as jnp
+    from repro.models.params import init_params, spec
+    from repro.serving.elastic import ElasticPool, remesh, reshard_params
+    specs = {"w": spec((8, 16), (None, "tensor"), dtype=jnp.float32),
+             "b": spec((16,), (None,), dtype=jnp.float32)}
+    params = init_params(jax.random.PRNGKey(0), specs)
+    pool = ElasticPool(4)
+    pool.fail(2)
+    mesh = remesh(pool)
+    moved = reshard_params(params, specs, mesh)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(moved[k]),
+                                      np.asarray(params[k]))
+
+
+@forced_only
+def test_forced_runtime_eviction_serves_all_streams():
+    """Sharded EdgeRuntime on a real 4-device mesh: after evicting a
+    shard, every stream (including the evicted shard's) is still served
+    on a survivor device with types matching the no-fault runtime."""
+    from repro.distributed.sharding import SINGLE_POD_RULES
+    from repro.models import detection as D
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    mesh = jax.make_mesh((4,), ("data",))
+    cfg = ServingConfig(n_streams=4, gpu_capacity_fps=480.0)
+    rt = EdgeRuntime(cfg, params, det_cfg, mesh=mesh,
+                     rules=SINGLE_POD_RULES)
+    oracle = EdgeRuntime(ServingConfig(n_streams=4,
+                                       gpu_capacity_fps=480.0),
+                         params, det_cfg)
+    pkts = [_packet(seed=s) for s in range(4)]
+    assert rt.evict_shard(2, t=0)
+    assert rt.active_shards == [0, 1, 3]
+    for s in range(4):
+        assert rt.stream_shard(s) in rt.active_shards
+        boxes, scores, types = rt.process_chunk(s, 0, pkts[s])
+        ob, os_, ot = oracle.process_chunk(s, 0, pkts[s])
+        np.testing.assert_array_equal(types, ot)
+        np.testing.assert_array_equal(boxes, np.asarray(ob),
+                                      err_msg=f"stream {s} diverged after "
+                                              f"eviction")
+    assert int(rt.deferred) == 0              # nobody was dropped

@@ -1,0 +1,166 @@
+"""Chaos-harness unit tests: fault-schedule determinism and window
+semantics, preset shapes, the vectorized AR(1) trace's tolerance contract
+against the loop reference, and the fault-profile composition hook.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.faults import (DISRUPTIVE_KINDS, FAULT_KINDS, FaultEvent,
+                                  FaultSchedule, PRESETS, preset_schedule)
+from repro.sim.network import (TraceConfig, apply_fault_profile,
+                               generate_trace, generate_trace_loop)
+
+
+# ----------------------------------------------------------- fault events
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("meteor", 0, 4)
+    with pytest.raises(ValueError, match="ends before it starts"):
+        FaultEvent("outage", 5, 3)
+    with pytest.raises(ValueError, match="magnitude"):
+        FaultEvent("bw_collapse", 0, 4, magnitude=-0.5)
+
+
+def test_fault_windows_are_half_open():
+    e = FaultEvent("stall", 3, 6, target=0)
+    assert not e.active(2) and e.active(3) and e.active(5) \
+        and not e.active(6)
+
+
+# -------------------------------------------------------------- schedules
+def test_bw_multiplier_composes_collapse_and_outage():
+    s = FaultSchedule([FaultEvent("bw_collapse", 0, 10, magnitude=0.5),
+                       FaultEvent("outage", 5, 7, magnitude=0.1)])
+    assert s.bw_multiplier(0) == 0.5
+    assert s.bw_multiplier(5) == pytest.approx(0.05)
+    assert s.bw_multiplier(10) == 1.0
+    np.testing.assert_allclose(
+        s.bw_multipliers(11),
+        [0.5] * 5 + [0.05, 0.05] + [0.5] * 3 + [1.0])
+
+
+def test_churn_leave_join_stall_semantics():
+    s = FaultSchedule([FaultEvent("leave", 4, 8, target=1),
+                       FaultEvent("join", 6, 100, target=2),
+                       FaultEvent("stall", 2, 3, target=0)])
+    # stream 1 leaves over [4, 8) and rejoins at 8
+    assert s.stream_active(1, 3) and not s.stream_active(1, 4)
+    assert not s.stream_active(1, 7) and s.stream_active(1, 8)
+    # stream 2 is absent UNTIL its join point
+    assert not s.stream_active(2, 0) and not s.stream_active(2, 5)
+    assert s.stream_active(2, 6)
+    # stream 0 is always active but stalled for exactly one chunk
+    assert s.stream_active(0, 2) and s.stalled(0, 2)
+    assert not s.stalled(0, 3) and not s.stalled(1, 2)
+    np.testing.assert_array_equal(s.active_mask(5, 3),
+                                  [True, False, False])
+
+
+def test_shard_slowdown_takes_worst_active_event():
+    s = FaultSchedule([FaultEvent("shard_slow", 0, 5, target=1,
+                                  magnitude=4.0),
+                       FaultEvent("shard_slow", 2, 4, target=-1,
+                                  magnitude=8.0)])
+    assert s.shard_slowdown(1, 0) == 4.0
+    assert s.shard_slowdown(1, 3) == 8.0     # worst wins, not product
+    assert s.shard_slowdown(0, 3) == 8.0     # target -1 hits every shard
+    assert s.shard_slowdown(0, 0) == 1.0     # healthy floor
+
+
+def test_loss_coins_are_deterministic_and_seed_sensitive():
+    ev = [FaultEvent("chunk_loss", 0, 50, magnitude=0.5)]
+    a, b = FaultSchedule(ev, seed=7), FaultSchedule(ev, seed=7)
+    other = FaultSchedule(ev, seed=8)
+    flips_a = [a.chunk_lost(c, t) for c in range(3) for t in range(50)]
+    flips_b = [b.chunk_lost(c, t) for c in range(3) for t in range(50)]
+    flips_o = [other.chunk_lost(c, t) for c in range(3) for t in range(50)]
+    assert flips_a == flips_b                 # replayable
+    assert flips_a != flips_o                 # seed actually matters
+    frac = np.mean(flips_a)
+    assert 0.3 < frac < 0.7                   # coins track the probability
+    # query order cannot change an answer (stateless draws)
+    assert a.chunk_lost(2, 49) == flips_a[-1]
+
+
+def test_loss_magnitude_one_defeats_retries():
+    s = FaultSchedule([FaultEvent("chunk_loss", 0, 5, magnitude=1.0)])
+    assert all(s.chunk_lost(0, t) for t in range(5))
+    assert not any(s.retry_succeeds(0, t, k)
+                   for t in range(5) for k in range(4))
+    # outside the window nothing is lost and retries always succeed
+    assert not s.chunk_lost(0, 5)
+    assert s.retry_succeeds(0, 5, 0)
+
+
+def test_disruption_mask_covers_disruptive_kinds_only():
+    s = FaultSchedule([FaultEvent("join", 0, 4, target=1),
+                       FaultEvent("outage", 6, 8, magnitude=0.1)])
+    m = s.disruption_mask(10)
+    assert not m[:6].any() and m[6] and m[7] and not m[8:].any()
+    assert "join" not in DISRUPTIVE_KINDS
+    assert set(FAULT_KINDS) - DISRUPTIVE_KINDS == {"join"}
+
+
+# ---------------------------------------------------------------- presets
+@pytest.mark.parametrize("name", PRESETS)
+def test_presets_build_and_fit_horizon(name):
+    s = preset_schedule(name, n_chunks=24, n_streams=3, n_shards=2, seed=0)
+    assert s.events and s.horizon() <= 24
+    assert all(e.kind in FAULT_KINDS for e in s.events)
+    # deterministic construction
+    s2 = preset_schedule(name, n_chunks=24, n_streams=3, n_shards=2, seed=0)
+    assert s.events == s2.events
+
+
+def test_preset_errors():
+    with pytest.raises(KeyError, match="unknown preset"):
+        preset_schedule("nope", n_chunks=24)
+    with pytest.raises(ValueError, match="n_chunks"):
+        preset_schedule("bw-collapse", n_chunks=4)
+
+
+# ------------------------------------------- vectorized trace (satellite)
+@pytest.mark.parametrize("ar", [0.0, 0.1, 0.5, 0.9, 0.99, -0.7])
+def test_generate_trace_matches_loop_reference(ar):
+    """Documented-tolerance contract: the blocked cumulative AR(1) form
+    agrees with the step-by-step recurrence to fp rounding (both consume
+    identical batched draws)."""
+    cfg = TraceConfig(ar=ar, seed=3)
+    vec = generate_trace(cfg, 4000)
+    loop = generate_trace_loop(cfg, 4000)
+    np.testing.assert_allclose(vec, loop, rtol=1e-12)
+
+
+def test_generate_trace_marginals_and_floor():
+    cfg = TraceConfig(mean_kbps=16000.0, floor_kbps=1000.0, seed=0)
+    bw = generate_trace(cfg, 20000)
+    assert bw.min() >= cfg.floor_kbps
+    # log-normal correction keeps the mean near mean_kbps (drops pull the
+    # observed mean slightly below)
+    assert 0.8 * cfg.mean_kbps < bw.mean() < 1.1 * cfg.mean_kbps
+
+
+def test_generate_trace_rejects_unstable_ar():
+    with pytest.raises(ValueError, match=r"\|ar\| < 1"):
+        generate_trace(TraceConfig(ar=1.0), 10)
+
+
+def test_apply_fault_profile():
+    trace = np.full(6, 8000.0)
+    mult = np.asarray([1.0, 0.5, 0.0, 1.0, 2.0, 1.0])
+    out = apply_fault_profile(trace, mult)
+    np.testing.assert_allclose(out, [8000.0, 4000.0, 1.0, 8000.0,
+                                     16000.0, 8000.0])
+    with pytest.raises(ValueError, match="mismatch"):
+        apply_fault_profile(trace, mult[:3])
+    with pytest.raises(ValueError, match=">= 0"):
+        apply_fault_profile(trace, -mult)
+
+
+def test_schedule_profile_composes_onto_trace():
+    s = FaultSchedule([FaultEvent("outage", 2, 4, magnitude=0.001)])
+    trace = generate_trace(TraceConfig(seed=1), 6)
+    out = apply_fault_profile(trace, s.bw_multipliers(6))
+    assert (out[2:4] < trace[2:4] * 0.01).all()
+    np.testing.assert_array_equal(out[:2], trace[:2])
+    np.testing.assert_array_equal(out[4:], trace[4:])

@@ -211,3 +211,183 @@ def test_edge_runtime_end_to_end_chunk():
     lat = rt.compute_latency(types, packet.total_bits, 8000.0)
     assert lat["total"] > 0
     assert not np.any(np.isnan(b))
+
+
+# --------------------------------------------- wall-clock hedging (chaos PR)
+def _warm_executor(replicas, n=12, quantile=0.9):
+    """Executor with enough real (fast) history that the deadline is a
+    few milliseconds rather than inf."""
+    import time
+    ex = HedgedExecutor(HedgeConfig(quantile=quantile, min_history=8),
+                        replicas)
+    for _ in range(n):
+        ex.run(None, primary=len(replicas) - 1)
+        time.sleep(0.001)
+    return ex
+
+
+def test_hedged_wallclock_issues_backup_and_backup_wins():
+    """The regression this guards: the wall-clock path used to time the
+    primary and NEVER hedge.  A primary that blows the deadline must get
+    a backup issued, and the faster backup must win."""
+    import time
+    mode = {"slow": False}
+
+    def r0(_):
+        if mode["slow"]:
+            time.sleep(0.4)
+        return "r0"
+
+    ex = _warm_executor([r0, lambda _: "r1"])
+    assert np.isfinite(ex._deadline()) and ex._deadline() < 0.1
+    mode["slow"] = True
+    out, winner = ex.run(None, primary=0)
+    assert ex.hedges == 1
+    assert winner == 1 and out == "r1"
+    ex.close()
+
+
+def test_hedged_wallclock_first_finisher_wins_even_if_primary():
+    """If the primary misses the deadline but still finishes before the
+    backup, the primary's (earlier) result is the one returned."""
+    import time
+
+    def primary(_):
+        time.sleep(0.06)
+        return "primary"
+
+    def backup(_):
+        time.sleep(0.5)
+        return "backup"
+
+    ex = _warm_executor([primary, backup, lambda _: "fast"])
+    # warm on replica 2; now pin primary=0 (0.06 s) with backup=1 (0.5 s)
+    out, winner = ex.run(None, primary=0)
+    assert ex.hedges == 1
+    assert winner == 0 and out == "primary"
+    ex.close()
+
+
+def test_hedged_wallclock_fast_primary_never_hedges():
+    ex = _warm_executor([lambda _: "r0", lambda _: "r1"])
+    out, winner = ex.run(None, primary=0)
+    assert winner == 0 and out == "r0" and ex.hedges == 0
+    ex.close()
+
+
+def test_hedged_wallclock_cold_history_runs_unhedged():
+    import time
+
+    def slow(_):
+        time.sleep(0.05)
+        return "slow"
+
+    ex = HedgedExecutor(HedgeConfig(min_history=20), [slow, lambda _: "x"])
+    out, winner = ex.run(None)         # deadline inf: no thread, no hedge
+    assert out == "slow" and winner == 0 and ex.hedges == 0
+    assert ex._pool is None
+    ex.close()
+
+
+def test_hedged_simulated_path_respects_primary_pin_and_max_hedges():
+    ex = HedgedExecutor(HedgeConfig(min_history=2, max_hedges=0),
+                        [lambda x: "r0", lambda x: "r1"])
+    ex.lat.extend([0.01, 0.01])
+    out, winner = ex.run(None, simulate_latency=lambda i: 9.0, primary=1)
+    assert winner == 1 and out == "r1" and ex.hedges == 0
+
+
+# --------------------------------------------- elastic pool contract (S1)
+def test_elastic_pool_healthy_contract():
+    pool = ElasticPool(3)
+    assert pool.healthy.dtype == np.bool_ and pool.n_healthy == 3
+    # caller-provided arrays are validated, coerced to bool, and copied
+    src = np.asarray([1, 0, 1], np.int64)
+    pool = ElasticPool(3, healthy=src)
+    assert pool.healthy.dtype == np.bool_ and pool.n_healthy == 2
+    src[0] = 0
+    assert pool.n_healthy == 2                # a copy, not a view
+    import pytest
+    with pytest.raises(ValueError, match="shape"):
+        ElasticPool(3, healthy=np.ones(4, bool))
+    with pytest.raises(ValueError, match="n_groups"):
+        ElasticPool(0)
+    with pytest.raises(IndexError):
+        pool.fail(3)
+    with pytest.raises(IndexError):
+        pool.recover(-1)
+    assert pool.healthy_groups() == [0, 2]
+
+
+def test_remesh_raises_instead_of_zero_sized_mesh():
+    import pytest
+    pool = ElasticPool(2)
+    pool.fail(0)
+    pool.fail(1)
+    with pytest.raises(RuntimeError, match="0 of 2 groups healthy"):
+        remesh(pool)
+    pool.recover(0)
+    # healthy groups exist but cannot host the model replica count
+    with pytest.raises(RuntimeError, match="n_model=2"):
+        remesh(pool, n_model=2)
+    with pytest.raises(ValueError, match="n_model"):
+        remesh(pool, n_model=0)
+
+
+# ------------------------------------------ straggler detector edges (S4)
+def test_straggler_threshold_edge_does_not_flag():
+    """Exactly threshold x median is NOT a straggler (strict >).  Three
+    replicas keep the global median pinned at the healthy pace."""
+    det = StragglerDetector(DetectorConfig(threshold=2.0, patience=1), 3)
+    for _ in range(5):
+        det.record(0, 1.0)
+        det.record(1, 1.0)
+        det.record(2, 2.0)
+    assert det.flagged() == []
+    det2 = StragglerDetector(DetectorConfig(threshold=2.0, patience=1), 3)
+    for _ in range(5):
+        det2.record(0, 1.0)
+        det2.record(1, 1.0)
+        det2.record(2, 2.1)
+    assert det2.flagged() == [2]
+
+
+def test_straggler_patience_requires_consecutive_strikes():
+    det = StragglerDetector(DetectorConfig(threshold=1.5, patience=3), 2)
+    for _ in range(4):
+        det.record(0, 1.0)
+        det.record(1, 5.0)
+    assert det.flagged() == [] and det.strikes[1] == 1
+    assert det.flagged() == [] and det.strikes[1] == 2
+    # a healthy interval resets the strike count
+    for _ in range(20):
+        det.record(1, 1.0)
+    assert det.flagged() == [] and det.strikes[1] == 0
+
+
+def test_straggler_window_ages_out_old_slowness():
+    """A small sliding window forgets a past slowdown: after enough
+    healthy samples the replica stops striking."""
+    det = StragglerDetector(DetectorConfig(threshold=1.5, patience=2,
+                                           window=4), 2)
+    for _ in range(4):
+        det.record(0, 1.0)
+        det.record(1, 8.0)
+    assert det.flagged() == []                # strike 1 of 2
+    for _ in range(4):                        # slow samples age out
+        det.record(0, 1.0)
+        det.record(1, 1.0)
+    assert det.flagged() == [] and det.strikes[1] == 0
+    assert len(det.history[1]) == 4
+
+
+def test_straggler_reset_clears_history_and_strikes():
+    det = StragglerDetector(DetectorConfig(threshold=1.5, patience=2), 2)
+    for _ in range(5):
+        det.record(0, 1.0)
+        det.record(1, 9.0)
+    det.flagged()
+    assert det.strikes[1] == 1
+    det.reset(1)
+    assert det.strikes[1] == 0 and len(det.history[1]) == 0
+    assert det.flagged() == []
