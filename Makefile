@@ -11,7 +11,8 @@ MD_ENV = XLA_FLAGS=--xla_force_host_platform_device_count=4 \
          JAX_PLATFORMS=cpu BISWIFT_FORCED_MULTIDEVICE=4
 
 .PHONY: lint test test-codec test-chaos test-multidevice bench \
-	bench-smoke bench-chaos bench-multidevice
+	bench-smoke bench-chaos bench-async bench-async-smoke \
+	bench-multidevice
 
 # first CI gate (the CI lint job runs exactly this target).  ruff check
 # blocks; the formatter check is non-blocking (leading -) until a
@@ -57,3 +58,13 @@ bench-chaos:
 
 bench-multidevice:
 	PYTHONPATH=src $(PY) -m benchmarks.run --multidevice
+
+# continuous-batching throughput rows + the 64-stream churn soak; exits
+# non-zero on any frame-accounting violation or queue leak (the CI
+# async-soak job runs the smoke variant and uploads BENCH_async.json).
+# Full mode also merges runtime_async_* rows into BENCH_pipeline.json.
+bench-async:
+	PYTHONPATH=src $(PY) -m benchmarks.async_serving
+
+bench-async-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.async_serving --smoke

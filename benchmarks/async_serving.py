@@ -1,0 +1,174 @@
+"""Async serving-plane benchmark:
+``PYTHONPATH=src python -m benchmarks.async_serving``.
+
+Measures the continuous-batching dispatcher (``EdgeRuntime.submit_chunk``
+/ ``flush`` / ``poll``) end to end:
+
+  * ``runtime_async_{1,2,4,8}stream`` — N concurrent streams submitted
+    into one padded batch-signature group, flushed as a single async
+    detector dispatch, polled once.  The rows that close the ROADMAP's
+    "100x jit-vs-runtime gap" item: compare against the pre-async
+    ``runtime_process_chunk_*`` rows kept in ``BENCH_pipeline.json``.
+  * ``runtime_async_soak_*`` — the 64-stream churn soak
+    (``run_soak(batch_submit=True)`` under ``churn_schedule``): staggered
+    joins/leaves/stalls plus a flaky-loss window.  The run FAILS (exit
+    non-zero) on any accounting violation
+    (``frames_in != inferred + reused + skipped``) or queue leak, so the
+    CI ``async-soak`` job gates on the serving invariants.
+
+Row management: new rows are MERGED into ``BENCH_pipeline.json`` by name
+(other rows preserved), migrating the payload to the v2 schema
+(``us_per_call`` numeric-or-null, labels in ``params``).  ``--smoke`` /
+``BISWIFT_BENCH_SMOKE=1`` shrinks shapes/reps and skips the merge
+(timings would be meaningless), writing ``BENCH_async.json`` only — the
+invariant gate still runs at full strictness.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+BENCH_JSON = os.environ.get("BENCH_JSON", "BENCH_pipeline.json")
+ASYNC_JSON = os.environ.get("BENCH_ASYNC_JSON", "BENCH_async.json")
+SMOKE = os.environ.get("BISWIFT_BENCH_SMOKE") == "1"
+
+
+def _throughput_rows(reference_fps: dict) -> list:
+    import jax
+    from benchmarks.run import _timeit
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.models import detection as D
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    from repro.sim.video_source import StreamConfig, generate_chunk
+
+    frames, _, _ = generate_chunk(
+        jax.random.PRNGKey(0), StreamConfig(height=64, width=96,
+                                            n_objects=3), 0, 4)
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    packet = encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+    T = packet.types.shape[0]
+
+    rows = []
+    for n_streams in ((1, 4) if SMOKE else (1, 2, 4, 8)):
+        with EdgeRuntime(ServingConfig(n_streams=n_streams), params,
+                         det_cfg) as rt:
+
+            def run_all():
+                tks = [rt.submit_chunk(s, 0, packet)
+                       for s in range(n_streams)]
+                rt.flush()
+                for tk in tks:
+                    rt.poll(tk)
+
+            # two warmups: the first chunk compiles the no-carry finish,
+            # the second the carried-init variant
+            run_all()
+            run_all()
+            us = _timeit(run_all, n=5, warmup=1)
+            fps = n_streams * T / (us / 1e6)
+            ref = reference_fps.get(f"runtime_process_chunk_"
+                                    f"{n_streams}stream")
+            derived = f"fps:{fps:.0f}"
+            if ref:
+                derived += f";vs_pre_async:{fps / ref:.1f}x"
+            rows.append((f"runtime_async_{n_streams}stream", us, derived))
+    return rows
+
+
+def _soak_row(errors: list) -> tuple:
+    from repro.serving.faults import SoakConfig, churn_schedule, run_soak
+    n_streams = 16 if SMOKE else 64
+    n_chunks = 6 if SMOKE else 12
+    cfg = SoakConfig(n_streams=n_streams, n_chunks=n_chunks,
+                     chunk_frames=3, gpu_capacity_fps=4000.0,
+                     content_groups=8, seed=7)
+    sched = churn_schedule(n_chunks, n_streams, seed=7)
+    rep = run_soak(cfg, sched, batch_submit=True)
+    bad = [c for c, s in rep["stream_stats"].items()
+           if s["frames_in"] != s["frames_inferred"] + s["frames_reused"]
+           + s["frames_skipped"]]
+    if bad:
+        errors.append(f"accounting leak on streams {bad}")
+    if rep["queue_leaks"]:
+        errors.append(f"{len(rep['queue_leaks'])} queue leaks")
+    total_in = sum(s["frames_in"] for s in rep["stream_stats"].values())
+    fps = total_in / max(rep["wall_s"], 1e-9)
+    return (f"runtime_async_soak_{n_streams}stream",
+            rep["wall_s"] * 1e6 / n_chunks,
+            f"churn;frames:{total_in};fps:{fps:.0f};"
+            f"accounting_ok:{not bad};queue_leaks:{len(rep['queue_leaks'])}")
+
+
+def _merge_into_bench(rows: list) -> None:
+    """Merge the async rows into BENCH_pipeline.json by name, migrating
+    any v1 payload to schema v2 on the way."""
+    from benchmarks.run import bench_row, migrate_rows_v2
+    payload = {"schema": "biswift-bench-v2", "rows": []}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            payload = json.load(f)
+    payload["schema"] = "biswift-bench-v2"
+    new = {n for n, _, _ in rows}
+    payload["rows"] = [r for r in migrate_rows_v2(payload.get("rows", []))
+                       if r["name"] not in new] \
+        + [bench_row(n, u, d) for n, u, d in rows]
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# merged {len(rows)} rows into {BENCH_JSON} "
+          f"({len(payload['rows'])} total)")
+
+
+def main() -> None:
+    global SMOKE
+    if "--smoke" in sys.argv:
+        SMOKE = True
+        os.environ["BISWIFT_BENCH_SMOKE"] = "1"
+    import jax
+
+    reference_fps = {}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            for r in json.load(f).get("rows", []):
+                d = str(r.get("derived", ""))
+                if d.startswith("fps:"):
+                    try:
+                        reference_fps[r["name"]] = \
+                            float(d.split(";")[0][4:])
+                    except ValueError:
+                        pass
+
+    t0 = time.time()
+    errors: list = []
+    print("name,us_per_call,derived")
+    rows = _throughput_rows(reference_fps)
+    rows.append(_soak_row(errors))
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# total wall: {time.time() - t0:.1f}s")
+
+    payload = {
+        "schema": "biswift-bench-v2",
+        "backend": jax.default_backend(),
+        "smoke": SMOKE,
+        "wall_s": round(time.time() - t0, 2),
+        "rows": [{"name": n, "us_per_call": round(float(u), 1),
+                  "params": None, "derived": str(d)} for n, u, d in rows],
+        "errors": errors,
+    }
+    with open(ASYNC_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {ASYNC_JSON} ({len(rows)} rows)")
+    if not SMOKE:
+        _merge_into_bench(rows)
+    if errors:
+        sys.exit("# async soak FAILED: " + "; ".join(errors))
+
+
+if __name__ == "__main__":
+    main()

@@ -26,14 +26,23 @@ BENCH_JSON = os.environ.get("BENCH_CHAOS_JSON", "BENCH_chaos.json")
 SMOKE = os.environ.get("BISWIFT_BENCH_SMOKE") == "1"
 
 
-def _preset_report(name: str, n_chunks: int, seed: int) -> dict:
+def _preset_report(name: str, n_chunks: int, seed: int,
+                   check_batch_equivalence: bool = False) -> dict:
     from repro.serving.faults import SoakConfig, preset_schedule, run_soak
     n_shards = 2 if name == "shard-chaos" else 1
     cfg = SoakConfig(n_chunks=n_chunks, n_streams=3, chunk_frames=3,
                      n_shards=n_shards, seed=seed)
     sched = preset_schedule(name, n_chunks=n_chunks, n_streams=3,
                             n_shards=n_shards, seed=seed)
-    rep = run_soak(cfg, sched)
+    # the continuous-batching path is the serving mode under test; one
+    # preset re-runs chunk-sequentially to prove control-equivalence
+    rep = run_soak(cfg, sched, batch_submit=True)
+    if check_batch_equivalence:
+        sync = run_soak(cfg, sched, batch_submit=False)
+        if rep["stream_stats"] != sync["stream_stats"] or \
+                not np.array_equal(rep["fps_norm"], sync["fps_norm"]):
+            raise AssertionError(
+                "batch_submit soak diverged from chunk-sequential soak")
     recovery = rep["recovery"] + rep["recovery_infer"]
     checked = [r for r in recovery if r["ok"] is not None]
     ladder = {k: int(sum(s[k] for s in rep["stream_stats"].values()))
@@ -43,6 +52,7 @@ def _preset_report(name: str, n_chunks: int, seed: int) -> dict:
                         "chunks_stalled")}
     return {
         "preset": name,
+        "batch_submit": True,
         "n_chunks": n_chunks,
         "n_shards": n_shards,
         "wall_s": round(rep["wall_s"], 3),
@@ -71,7 +81,9 @@ def main() -> None:
     print("preset,wall_s,accounting_ok,recovery_ok,evictions,hedges")
     for name in PRESETS:
         try:
-            rep = _preset_report(name, n_chunks, seed=7)
+            rep = _preset_report(
+                name, n_chunks, seed=7,
+                check_batch_equivalence=(name == "stream-churn"))
         except Exception as e:  # keep the harness robust, gate on smoke
             errors.append(f"{name}: {type(e).__name__}: {e}")
             print(f"{name},-1,ERROR,ERROR,0,0")

@@ -31,6 +31,29 @@ BENCH_JSON = os.environ.get("BENCH_JSON", "BENCH_pipeline.json")
 SMOKE = os.environ.get("BISWIFT_BENCH_SMOKE") == "1"
 
 
+def bench_row(name, us, derived) -> dict:
+    """Serialize one (name, us-or-label, derived) bench tuple as a
+    schema-v2 row: ``us_per_call`` stays numeric (or null), string labels
+    move to ``params``."""
+    if isinstance(us, (int, float)) and not isinstance(us, bool):
+        return {"name": name, "us_per_call": float(us), "params": None,
+                "derived": str(derived)}
+    return {"name": name, "us_per_call": None, "params": str(us),
+            "derived": str(derived)}
+
+
+def migrate_rows_v2(rows: list[dict]) -> list[dict]:
+    """Upgrade v1 row dicts to v2 (see ``bench_row``).  v1 rows abused
+    ``us_per_call`` for label strings; v2 rows pass through unchanged."""
+    out = []
+    for r in rows:
+        us = r.get("us_per_call")
+        if us is None and r.get("params") is not None:
+            us = r["params"]          # already v2
+        out.append(bench_row(r["name"], us, r.get("derived", "")))
+    return out
+
+
 def _timeit(fn, *args, n=3, warmup=1):
     if SMOKE:
         n, warmup = 1, 0
@@ -274,12 +297,15 @@ def main() -> None:
     print(f"# total wall: {time.time() - t0:.1f}s")
     errors = [n for n, _, d in all_rows if str(d).startswith("ERROR")]
     payload = {
-        "schema": "biswift-bench-v1",
+        # v2: ``us_per_call`` is numeric-or-null, always.  Figure rows
+        # whose middle slot is a parameter label (e.g. "scale=0.25") land
+        # in ``params`` instead of corrupting the numeric field — numeric
+        # trajectory tooling can trust every us_per_call it reads.
+        "schema": "biswift-bench-v2",
         "backend": jax.default_backend(),
         "smoke": SMOKE,
         "wall_s": round(time.time() - t0, 2),
-        "rows": [{"name": n, "us_per_call": u, "derived": str(d)}
-                 for n, u, d in all_rows],
+        "rows": [bench_row(n, u, d) for n, u, d in all_rows],
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1)

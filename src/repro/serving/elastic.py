@@ -6,6 +6,13 @@ train/checkpoint.py does the same for training).  On CPU we exercise the
 logic with host-platform fake devices in tests; the forced-4-device child
 proves the evict → remesh → re-dispatch path bit-exact for surviving
 streams (``tests/test_chaos.py``).
+
+Contract with the async dispatch plane (``serving/runtime.py``): an
+eviction re-homes both the evicted shard's QUEUED requests and its
+pending (submitted-but-unflushed) tickets onto survivor shards; batches
+already dispatched to the evicted device are NOT cancelled — they retire
+normally at the next double-buffer rotation or at ``poll``, so in-flight
+results are never dropped mid-eviction.
 """
 from __future__ import annotations
 

@@ -249,6 +249,46 @@ def preset_schedule(name: str, *, n_chunks: int, n_streams: int = 3,
     return FaultSchedule(events, seed=seed)
 
 
+def churn_schedule(n_chunks: int, n_streams: int, *, seed: int = 0,
+                   join_frac: float = 0.25, leave_frac: float = 0.2,
+                   stall_frac: float = 0.05,
+                   loss_window: bool = True) -> FaultSchedule:
+    """Many-stream churn generator for O(100)-stream soaks.
+
+    Deterministic in ``seed``: the last ``join_frac`` of the streams join
+    staggered over the first half of the horizon (late-arriving cameras),
+    ``leave_frac`` of the early streams each take one leave window,
+    ``stall_frac`` stall for a chunk mid-run, and (optionally) a global
+    flaky-loss window exercises the retry ladder while the pool is at its
+    churn peak.  Unlike the 3-stream presets, windows are drawn per
+    stream, so at 64+ streams every chunk sees a different live set.
+    """
+    if n_chunks < 4:
+        raise ValueError(f"churn needs n_chunks >= 4, got {n_chunks}")
+    rng = np.random.default_rng(seed)
+    events = []
+    n_join = int(n_streams * join_frac)
+    for c in range(n_streams - n_join, n_streams):
+        t0 = int(rng.integers(1, max(n_chunks // 2, 2)))
+        events.append(FaultEvent("join", t0, n_chunks, target=c))
+    early = max(n_streams - n_join, 1)
+    n_leave = min(int(n_streams * leave_frac), early)
+    for c in rng.choice(early, size=n_leave, replace=False):
+        a = int(rng.integers(1, max(n_chunks - 2, 2)))
+        b = min(a + 1 + int(rng.integers(1, max(n_chunks // 3, 2))),
+                n_chunks - 1)
+        events.append(FaultEvent("leave", a, b, target=int(c)))
+    for c in rng.choice(early, size=min(max(int(n_streams * stall_frac),
+                                            1), early), replace=False):
+        a = int(rng.integers(1, n_chunks - 1))
+        events.append(FaultEvent("stall", a, a + 1, target=int(c)))
+    if loss_window:
+        mid = n_chunks // 2
+        events.append(FaultEvent("chunk_loss", mid, mid + 2, target=-1,
+                                 magnitude=0.3))
+    return FaultSchedule(events, seed=seed)
+
+
 # ---------------------------------------------------------------------------
 # closed-loop chaos soak
 # ---------------------------------------------------------------------------
@@ -269,6 +309,11 @@ class SoakConfig:
     tr1: float = 0.05
     tr2: float = 0.1
     seed: int = 0
+    # shared-content pools for many-stream soaks: stream c renders the
+    # frames of group ``c % content_groups`` (None = per-stream content,
+    # the historical behavior).  64 streams over 8 pools keep the encode
+    # cache small while every stream still runs its own control ladder.
+    content_groups: int | None = None
 
 
 def _recovery_report(fps_norm: np.ndarray, disrupted: np.ndarray,
@@ -323,7 +368,7 @@ def _recovery_report(fps_norm: np.ndarray, disrupted: np.ndarray,
 
 
 def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
-             degrade=None, detector=None) -> dict:
+             degrade=None, detector=None, batch_submit: bool = False) -> dict:
     """Drive an :class:`EdgeRuntime` through ``n_chunks`` of churning,
     faulty streams and report accounting + recovery.
 
@@ -333,8 +378,14 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
     offers its chunk to ``process_chunk``; modeled chunk latency feeds the
     deadline ladder, and ``poll_faults`` runs straggler eviction/recovery
     once per chunk.  Content per stream is a fixed seeded chunk re-offered
-    every step (encodes are cached per (stream, rung)) — the soak
+    every step (encodes are cached per (content group, rung)) — the soak
     exercises the CONTROL plane, not content diversity.
+
+    ``batch_submit=True`` drives the continuous-batching path: every live
+    stream's chunk is SUBMITTED first (``submit_chunk``), then the whole
+    round is flushed as cross-stream padded batches and polled — the mode
+    that scales the soak to O(100) concurrent streams.  The default keeps
+    the chunk-sequential PR-6 behavior bit-for-bit.
 
     Everything that influences a decision is simulated/seeded, so two
     calls with the same inputs produce identical reports (minus wall
@@ -371,17 +422,21 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
                                        seed=cfg.seed), cfg.n_chunks)
     trace = apply_fault_profile(trace, schedule.bw_multipliers(cfg.n_chunks))
 
-    frames = {c: np.asarray(generate_chunk(
+    def _group(c: int) -> int:
+        return c % cfg.content_groups if cfg.content_groups else c
+
+    frames = {g: np.asarray(generate_chunk(
         None, StreamConfig(height=cfg.height, width=cfg.width,
-                           n_objects=2, seed=cfg.seed * 101 + c), 0, T)[0])
-        for c in range(C)}
+                           n_objects=2, seed=cfg.seed * 101 + g), 0, T)[0])
+        for g in sorted({_group(c) for c in range(C)})}
     packets: dict = {}
 
     def packet_for(c: int, level: int, bw: float):
-        if (c, level) not in packets:
-            packets[(c, level)] = encode_hybrid(
-                frames[c], bw, cfg.tr1, cfg.tr2, fps=cfg.fps, level=level)
-        return packets[(c, level)]
+        g = _group(c)
+        if (g, level) not in packets:
+            packets[(g, level)] = encode_hybrid(
+                frames[g], bw, cfg.tr1, cfg.tr2, fps=cfg.fps, level=level)
+        return packets[(g, level)]
 
     delivered_fps = np.zeros(cfg.n_chunks)
     infer_fps = np.zeros(cfg.n_chunks)
@@ -394,6 +449,7 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
         n_live = max(len(live), 1)
         alloc = float(trace[t]) / n_live
         delivered = inferred = 0
+        round_ = []                    # (stream, ticket-or-types, packet)
         for c in live:
             if schedule.stalled(c, t):
                 rt.note_stall(c, t)
@@ -401,7 +457,14 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
             base = ladder_for_bandwidth(video_bandwidth_share(alloc))
             level = rt.suggest_level(c, base)
             pkt = packet_for(c, level, alloc)
-            _, _, types = rt.process_chunk(c, t, pkt)
+            if batch_submit:
+                round_.append((c, rt.submit_chunk(c, t, pkt), pkt))
+            else:
+                round_.append((c, rt.process_chunk(c, t, pkt)[2], pkt))
+        if batch_submit:
+            rt.flush()
+        for c, item, pkt in round_:
+            types = rt.poll(item)[2] if batch_submit else item
             st = rt.stats[c]
             bits = pkt.total_bits if st.last_transmitted else 0.0
             lat = rt.compute_latency(types, bits, alloc, stream=c)["total"] \
@@ -418,6 +481,7 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
         fps_norm[t] = delivered_fps[t] / n_live
         infer_norm[t] = infer_fps[t] / n_live
     wall = time.perf_counter() - wall0
+    rt.close()                        # retire in-flight work, stop hedge pool
 
     stats = {c: rt.stats[c].as_dict() for c in sorted(rt.stats)}
     accounting_ok = all(

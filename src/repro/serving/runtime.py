@@ -2,8 +2,33 @@
 
 Binds the hybrid decoder's three pipelines to the scheduler's queues and a
 (pjit-able) detector, per chunk per stream.  This is the deployable analog
-of the paper's Fig. 4 right half; benchmarks/throughput.py drives it with
+of the paper's Fig. 4 right half; benchmarks/run.py drives it with
 1..N concurrent streams to reproduce Fig. 11(a).
+
+Async continuous-batching plane (ISSUE 7): the runtime is a
+submit/flush/poll dispatcher in the style of LLM serving —
+
+  * ``submit_chunk`` runs ONLY host-side control (delivery ladder,
+    admission, demotion, queue accounting) and stages the chunk's frames
+    / motion vectors on device with a single jit (``_stage_chunk``); it
+    returns a :class:`ChunkTicket` immediately, without waiting for any
+    device work.
+  * ``flush`` groups pending tickets by (shard, T, H, W) batch signature,
+    gathers each group's pipeline-①/② frames into one padded detector
+    batch (power-of-two bucketed so the jit cache stays warm), dispatches
+    it asynchronously, and finishes every ticket with one fused
+    scatter+reuse jit (``_finish_chunk``).  At most
+    ``ServingConfig.max_inflight`` dispatched batches are outstanding per
+    shard (double-buffered chunk slots): dispatching past the cap first
+    retires the oldest with ``block_until_ready``, so host scheduling of
+    the NEXT batch overlaps the device computing the current one.
+  * ``poll`` materializes a ticket's results with a single device->host
+    transfer at the poll boundary — no intermediate ``np.asarray`` syncs
+    anywhere on the chunk path.
+
+``process_chunk`` is now literally ``poll(submit_chunk(...))``, so every
+legacy call site keeps its synchronous semantics (admission sees drained
+queues, one dispatch per chunk) while sharing the async machinery.
 
 Robustness plane (chaos PR): when constructed with ``faults=`` (a
 ``repro.serving.faults.FaultSchedule``) the runtime additionally runs
@@ -16,17 +41,22 @@ Robustness plane (chaos PR): when constructed with ``faults=`` (a
     lands in ``stats[stream]`` (a :class:`StreamStats`).
   * **straggler eviction + elastic recovery** — per-dispatch shard
     timings feed a ``StragglerDetector``; ``poll_faults`` evicts flagged
-    shards from ``active_shards`` (re-homing queued requests onto
-    survivors via ``PipelineQueues.remap_shards``) and re-admits them when
-    the schedule says the device is healthy again.  Dispatches hedge
-    across active shards through a ``HedgedExecutor``.
+    shards from ``active_shards`` (re-homing queued requests AND pending
+    tickets onto survivors via ``PipelineQueues.remap_shards``) and
+    re-admits them when the schedule says the device is healthy again.
+    Dispatches hedge across active shards through a ``HedgedExecutor``;
+    already-dispatched batches complete on their original device.
 
-The accounting invariant every chaos test asserts:
-``frames_in == frames_inferred + frames_reused + frames_skipped``.
+The accounting invariant every chaos test asserts —
+``frames_in == frames_inferred + frames_reused + frames_skipped`` — is
+established at SUBMIT time (types are decided by host control), so it
+holds for every stream even while its chunk is still in flight.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import defaultdict, deque
+from functools import partial
 
 import numpy as np
 import jax
@@ -47,10 +77,97 @@ from repro.serving.straggler import (DetectorConfig, HedgeConfig,
 f32 = np.float32
 
 
+# ---------------------------------------------------------------------------
+# module-level jits — one trace per batch signature, shared by every runtime
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("hd_hw",))
+def _stage_chunk(types, anchor_hd, recon, mv, *, hd_hw):
+    """Stage one chunk on device: upscale the LR video to analytics
+    resolution, select each frame's execution plane (decoded HD anchor for
+    type-1, upscaled LR for the rest), and upscale the motion vectors —
+    one async dispatch, nothing touches the host."""
+    H, W = hd_hw
+    lr_up = upscale_nearest(recon, H, W)
+    frames = jnp.where((types == 1)[:, None, None], anchor_hd, lr_up)
+    return frames, _upscale_mvs(mv, (H, W))
+
+
+@jax.jit
+def _gather_batch(frames_seq, flat_idx, valid):
+    """Pack per-ticket staged frames into one padded detector batch.
+
+    ``frames_seq``: tuple of (T, H, W) staged planes (one per ticket slot,
+    padded to a power-of-two count so the trace cache stays bounded);
+    ``flat_idx``: (n_pad,) row ``slot * T + frame_idx`` per batch entry;
+    ``valid``: (n_pad,) mask — padding rows come out exactly zero, matching
+    the legacy ``np.zeros_like`` padding semantics bit-for-bit."""
+    stacked = jnp.stack(frames_seq)
+    flat = stacked.reshape((-1,) + stacked.shape[2:])
+    batch = jnp.take(flat, jnp.clip(flat_idx, 0, flat.shape[0] - 1), axis=0)
+    return jnp.where(valid[:, None, None], batch, 0.0)
+
+
+@partial(jax.jit, static_argnames=("has_init",))
+def _finish_chunk(types, pos, mvs, batch_boxes, batch_scores,
+                  init_b, init_s, *, has_init):
+    """Scatter one ticket's rows out of the batched detector output and
+    run pipeline-③ reuse — fused, so the carry slice (``boxes[-1]``)
+    never leaves the device between chunks."""
+    mask = pos >= 0
+    idx = jnp.clip(pos, 0, batch_boxes.shape[0] - 1)
+    boxes_t = jnp.where(mask[:, None, None], batch_boxes[idx], 0.0)
+    scores_t = jnp.where(mask[:, None], batch_scores[idx], 0.0)
+    boxes, scores = reuse_chunk(
+        types, mvs, boxes_t, scores_t,
+        init_boxes=init_b if has_init else None,
+        init_scores=init_s if has_init else None)
+    return boxes, scores, boxes[-1], scores[-1]
+
+
+@partial(jax.jit, static_argnames=("T",))
+def _hold_chunk(last_b, last_s, *, T):
+    """Zero-motion pipeline-③ hold for an undeliverable chunk with a
+    carry: the previous detections repeated across the chunk."""
+    return (jnp.broadcast_to(last_b[None], (T,) + last_b.shape),
+            jnp.broadcast_to(last_s[None], (T,) + last_s.shape))
+
+
+def _pad_bucket(n: int, base: int) -> int:
+    """Smallest ``base * 2**k >= n`` — power-of-two bucketed padding keeps
+    the detector's jit cache small while capping padding waste at 2x."""
+    m = max(int(base), 1)
+    while m < n:
+        m *= 2
+    return m
+
+
 @dataclasses.dataclass
 class StreamState:
-    last_boxes: np.ndarray
-    last_scores: np.ndarray
+    """Pipeline-③ carry across chunks.  DEVICE arrays: the carry feeds the
+    next chunk's ``_finish_chunk`` without a host round trip."""
+    last_boxes: jax.Array
+    last_scores: jax.Array
+
+
+@dataclasses.dataclass
+class ChunkTicket:
+    """Handle for one submitted chunk.  ``done`` flips when the device
+    graph is built (dispatch + finish); ``poll`` materializes the result
+    with one transfer and caches it."""
+    stream: int
+    chunk_t: int
+    shard: int
+    types: np.ndarray
+    hw: tuple
+    reqs: list = dataclasses.field(default_factory=list)
+    frames_dev: jax.Array | None = None
+    mvs_dev: jax.Array | None = None
+    init_b: jax.Array | None = None
+    init_s: jax.Array | None = None
+    n_cells: int = 0
+    done: bool = False
+    _dev_out: tuple | None = None      # (boxes, scores) on device
+    _host: tuple | None = None         # cached poll result
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,15 +272,23 @@ class EdgeRuntime:
         infer_jit = jax.jit(lambda p, frames: D.decode_boxes(
             D.forward(p, det_cfg, frames), det_cfg))
 
-        def make_infer(params):
-            return lambda frames: infer_jit(params, frames)
+        def make_infer(params, dev=None):
+            # staged batches are COMMITTED (jit outputs); an explicit
+            # device_put routes them onto this replica's device — required
+            # for both the per-shard dispatch and the hedge backup, whose
+            # input may sit on the primary's device
+            if dev is None:
+                return lambda frames: infer_jit(params, frames)
+            return lambda frames: infer_jit(params,
+                                            jax.device_put(frames, dev))
 
         self._infer = make_infer(detector_params)
         if mesh is not None and self.n_shards > 1:
             devs = list(mesh.devices.flat)
             self._shard_infer = [
                 make_infer(jax.device_put(detector_params,
-                                          devs[i % len(devs)]))
+                                          devs[i % len(devs)]),
+                           devs[i % len(devs)])
                 for i in range(self.n_shards)]
         self.queues = PipelineQueues(cfg, self._infer_batch)
         self.admission = AdmissionController(cfg)
@@ -174,6 +299,12 @@ class EdgeRuntime:
         # overload, and whole chunks forced onto reuse (deep overload)
         self.demoted_frames = np.zeros(self.n_shards, np.int64)
         self.reuse_fallback_chunks = np.zeros(self.n_shards, np.int64)
+
+        # ------------------------------------------ async dispatch plane
+        self.max_inflight = max(int(getattr(cfg, "max_inflight", 2)), 1)
+        self._pending: list[ChunkTicket] = []     # submitted, undispatched
+        self._open: dict[int, ChunkTicket] = {}   # stream -> pending ticket
+        self._inflight: dict[int, deque] = defaultdict(deque)
 
         # ---------------------------------------------- robustness plane
         self.faults = faults
@@ -215,16 +346,18 @@ class EdgeRuntime:
     def hedged_dispatches(self) -> int:
         return 0 if self._hedge is None else self._hedge.hedges
 
-    def _infer_batch(self, frames, shard=None):
-        """Shard-aware detector dispatch: in sharded mode the batch runs
-        on the shard's own committed device (jit follows the committed
-        params); otherwise on the single default-device detector.  With a
-        fault schedule armed, the dispatch's simulated step time (base
-        cost × the schedule's shard slowdown) feeds the straggler
-        detector, and the call hedges across active shards when the
-        primary would blow the latency-quantile deadline."""
+    def _infer_batch_dev(self, frames, shard=None):
+        """Shard-aware detector dispatch returning DEVICE arrays
+        ``(boxes, scores)`` — nothing here blocks on the computation.
+        In sharded mode the batch runs on the shard's own committed
+        device (jit follows the committed params); otherwise on the
+        single default-device detector.  With a fault schedule armed, the
+        dispatch's simulated step time (base cost × the schedule's shard
+        slowdown) feeds the straggler detector, and the call hedges
+        across active shards when the primary would blow the
+        latency-quantile deadline."""
         if shard is not None and self.faults is not None:
-            base = len(frames) / max(self.cfg.shard_capacity_fps, 1e-6)
+            base = frames.shape[0] / max(self.cfg.shard_capacity_fps, 1e-6)
             slow = self.faults.shard_slowdown(shard, self._t)
             self.straggler.record(shard, base * slow)
             if self._hedge is not None and len(self.active_shards) > 1 \
@@ -235,13 +368,17 @@ class EdgeRuntime:
                     return base * self.faults.shard_slowdown(
                         self.active_shards[i], self._t)
 
-                out, _ = self._hedge.run(jnp.asarray(frames),
+                out, _ = self._hedge.run(frames,
                                          simulate_latency=sim, primary=idx)
-                boxes, scores = out
-                return list(zip(np.asarray(boxes), np.asarray(scores)))
+                return out
         fn = self._infer if (shard is None or self._shard_infer is None) \
             else self._shard_infer[shard]
-        boxes, scores = fn(jnp.asarray(frames))
+        return fn(frames)
+
+    def _infer_batch(self, frames, shard=None):
+        """Legacy host-facing executor (``PipelineQueues.drain_fused``):
+        the device dispatch plus an immediate transfer per row."""
+        boxes, scores = self._infer_batch_dev(jnp.asarray(frames), shard)
         return list(zip(np.asarray(boxes), np.asarray(scores)))
 
     # ------------------------------------------------- degradation ladder
@@ -329,51 +466,55 @@ class EdgeRuntime:
                 f"{'lost' if lost else 'corrupt'} chunk undeliverable")
         return False
 
-    def _skip_chunk(self, stream: int, t: int, packet: HybridPacket):
+    def _skip_chunk(self, stream: int, t: int,
+                    packet: HybridPacket) -> ChunkTicket:
         """Rungs 3/4 for an undeliverable chunk: hold the previous
         detections (zero-motion pipeline-③) when a carry exists, else
-        drop the chunk with explicit accounting (types == 0)."""
+        drop the chunk with explicit accounting (types == 0).  The carry
+        stays on device; the hold is a broadcast, not a transfer."""
         st = self.stats[stream]
         T = packet.types.shape[0]
         H, W = packet.anchor_hd.shape[1:]
         n_cells = (H // self.det_cfg.stride) * (W // self.det_cfg.stride)
         prev = self.streams.get(stream)
+        tk = ChunkTicket(stream, t, self.stream_shard(stream),
+                         np.zeros(T, packet.types.dtype), (H, W),
+                         n_cells=n_cells, done=True)
         if prev is not None and prev.last_boxes.shape[0] == n_cells:
-            types = np.full(T, 3, packet.types.dtype)
-            boxes = np.repeat(prev.last_boxes[None], T, axis=0)
-            scores = np.repeat(prev.last_scores[None], T, axis=0)
+            tk.types = np.full(T, 3, packet.types.dtype)
+            tk._dev_out = _hold_chunk(prev.last_boxes, prev.last_scores,
+                                      T=T)
             st.frames_reused += T
             st.reuse_fallback_chunks += 1
             st.last_delivered = T
             st.note(t, "reuse_hold",
                     f"{T} frames held on carried detections")
-            return boxes.astype(f32), scores.astype(f32), types
-        types = np.zeros(T, packet.types.dtype)
+            return tk
         st.frames_skipped += T
         st.last_skipped = T
         st.note(t, "frame_skip", f"{T} frames dropped (no carry)")
-        return (np.zeros((T, n_cells, 4), f32),
-                np.zeros((T, n_cells), f32), types)
+        tk._host = (np.zeros((T, n_cells, 4), f32),
+                    np.zeros((T, n_cells), f32), tk.types)
+        return tk
 
-    # ------------------------------------------------------------------
-    def process_chunk(self, stream: int, t: int, packet: HybridPacket):
-        """Returns per-frame (boxes, scores, types) for one chunk.
+    # --------------------------------------------------- submit/flush/poll
+    def submit_chunk(self, stream: int, t: int,
+                     packet: HybridPacket) -> ChunkTicket:
+        """Non-blocking admission of one chunk: run the host-side control
+        ladder (delivery retries, forced reuse, admission/demotion), stage
+        the chunk's execution planes on device, enqueue its pipeline-①/②
+        requests, and return a :class:`ChunkTicket`.  No device work is
+        waited on; the detector dispatch happens at ``flush`` and results
+        cross to the host only at ``poll``.
 
-        All pipeline-①/② frames of the chunk go through ONE padded detector
-        invocation (``PipelineQueues.drain_fused``) on the stream's OWN
-        mesh shard instead of one dispatch per frame; admission reads that
-        shard's queue depths before the chunk is enqueued (a hot shard
-        defers its streams to pipeline-③ reuse without stalling the other
-        shards), and pipeline ③ carries the previous chunk's last
-        detections across the chunk boundary.
-
-        With a fault schedule armed, the chunk first runs the delivery
-        ladder (loss/corruption → retries → reuse-hold/frame-skip) and a
-        stream in forced-reuse state routes the whole delivered chunk to
-        pipeline ③.  Returned ``types`` may then contain 0 (explicitly
-        skipped frames) alongside the usual 1/2/3.
-        """
+        Per-stream ordering: submitting a stream's next chunk while its
+        previous ticket is still pending first flushes the pipeline, so
+        the pipeline-③ carry chain stays ordered (on device)."""
         self._t = t
+        prev_tk = self._open.get(stream)
+        if prev_tk is not None and not prev_tk.done:
+            self.flush()
+
         st = self._stats(stream)
         T = packet.types.shape[0]
         st.chunks += 1
@@ -422,60 +563,184 @@ class EdgeRuntime:
                 st.reuse_fallback_chunks += 1
                 st.note(t, "reuse_chunk", "deep overload")
 
-        mvs_hd = np.asarray(_upscale_mvs(enc.mv, (H, W)))
+        # one async dispatch stages the whole chunk on device; values stay
+        # there until the poll boundary
+        frames_dev, mvs_dev = _stage_chunk(
+            jnp.asarray(types), jnp.asarray(packet.anchor_hd),
+            jnp.asarray(enc.recon), jnp.asarray(enc.mv), hd_hw=(H, W))
 
-        # submit pipeline ①/② frames; one fused padded dispatch for all.
-        # lr_up is computed lazily: when overload demoted every type-2
-        # frame, the shed-load path skips the whole-chunk upscale entirely
-        lr_up = None
-        for i in range(T):
-            if types[i] == 1:
-                self.queues.submit(InferRequest(stream, t, i, 1,
-                                                packet.anchor_hd[i],
-                                                shard=shard))
-            elif types[i] == 2:
-                if lr_up is None:
-                    lr_up = np.asarray(upscale_nearest(enc.recon, H, W))
-                self.queues.submit(InferRequest(stream, t, i, 2, lr_up[i],
-                                                shard=shard))
-        done = self.queues.drain_fused(shard=shard)
-
-        # collect per-frame detections; pipeline ③ reuse fills the gaps
         n_cells = (H // self.det_cfg.stride) * (W // self.det_cfg.stride)
-        boxes_t = np.zeros((T, n_cells, 4), f32)
-        scores_t = np.zeros((T, n_cells), f32)
-        for req, (b, s) in done:
-            if req.stream == stream and req.chunk_t == t:
-                boxes_t[req.frame_idx] = b
-                scores_t[req.frame_idx] = s
+        tk = ChunkTicket(stream, t, shard, types, (H, W),
+                         frames_dev=frames_dev, mvs_dev=mvs_dev,
+                         init_b=None if prev is None else prev.last_boxes,
+                         init_s=None if prev is None else prev.last_scores,
+                         n_cells=n_cells)
+        for i in range(T):
+            if types[i] in (1, 2):
+                req = InferRequest(stream, t, int(i), int(types[i]),
+                                   None, shard=shard)
+                self.queues.submit(req)
+                tk.reqs.append(req)
 
-        # pipeline-③ carry: seed reuse with the previous chunk's last boxes
-        init_b = jnp.asarray(prev.last_boxes) if prev is not None else None
-        init_s = jnp.asarray(prev.last_scores) if prev is not None else None
-        boxes, scores = reuse_chunk(jnp.asarray(types), jnp.asarray(mvs_hd),
-                                    jnp.asarray(boxes_t),
-                                    jnp.asarray(scores_t),
-                                    init_boxes=init_b, init_scores=init_s)
-        self.streams[stream] = StreamState(last_boxes=np.asarray(boxes[-1]),
-                                           last_scores=np.asarray(scores[-1]))
         n_inf = int(((types == 1) | (types == 2)).sum())
         st.frames_inferred += n_inf
         st.frames_reused += int((types == 3).sum())
         st.last_inferred = n_inf
         st.last_delivered = T
-        return np.asarray(boxes), np.asarray(scores), types
+        self._pending.append(tk)
+        self._open[stream] = tk
+        return tk
+
+    def _dispatch_group(self, shard: int, tickets: list[ChunkTicket]):
+        """Dispatch one (shard, T, H, W) signature group: gather every
+        ticket's pipeline-①/② frames into one padded batch (① rows before
+        ②, submit order within each, matching the legacy drain), run the
+        detector asynchronously under the double-buffer cap, and finish
+        each ticket's scatter+reuse on device."""
+        T = int(tickets[0].types.shape[0])
+        by_stream = {tk.stream: tk for tk in tickets}
+        slot = {id(tk): i for i, tk in enumerate(tickets)}
+        reqs = [r for tk in tickets for r in tk.reqs if r.pipeline == 1] \
+            + [r for tk in tickets for r in tk.reqs if r.pipeline == 2]
+        self.queues.take(reqs)
+
+        bb = bs = None
+        if reqs:
+            n = len(reqs)
+            n_pad = _pad_bucket(n, self.cfg.batch_size)
+            flat_idx = np.zeros(n_pad, np.int32)
+            valid = np.zeros(n_pad, bool)
+            for j, r in enumerate(reqs):
+                flat_idx[j] = slot[id(by_stream[r.stream])] * T \
+                    + r.frame_idx
+                valid[j] = True
+            k_pad = _pad_bucket(len(tickets), 1)
+            planes = tuple(tk.frames_dev for tk in tickets) \
+                + (tickets[0].frames_dev,) * (k_pad - len(tickets))
+            batch = _gather_batch(planes, jnp.asarray(flat_idx),
+                                  jnp.asarray(valid))
+            q = self._inflight[shard]
+            while len(q) >= self.max_inflight:
+                jax.block_until_ready(q.popleft())
+            bb, bs = self._infer_batch_dev(batch, shard=shard)
+            if self._shard_infer is not None:
+                # finish on the staging device: the carry must live on ONE
+                # device regardless of which shard ran the batch
+                home = next(iter(tickets[0].mvs_dev.devices()))
+                bb, bs = jax.device_put((bb, bs), home)
+            q.append((bb, bs))
+
+        for tk in tickets:
+            pos = np.full(T, -1, np.int32)
+            for j, r in enumerate(reqs):
+                if r.stream == tk.stream:
+                    pos[r.frame_idx] = j
+            if bb is None:
+                dbb = jnp.zeros((1, tk.n_cells, 4), jnp.float32)
+                dbs = jnp.zeros((1, tk.n_cells), jnp.float32)
+            else:
+                dbb, dbs = bb, bs
+            has_init = tk.init_b is not None
+            zb = jnp.zeros((tk.n_cells, 4), jnp.float32)
+            zs = jnp.zeros((tk.n_cells,), jnp.float32)
+            boxes, scores, last_b, last_s = _finish_chunk(
+                jnp.asarray(tk.types), jnp.asarray(pos), tk.mvs_dev,
+                dbb, dbs,
+                tk.init_b if has_init else zb,
+                tk.init_s if has_init else zs, has_init=has_init)
+            self.streams[tk.stream] = StreamState(last_b, last_s)
+            tk._dev_out = (boxes, scores)
+            tk.done = True
+            tk.frames_dev = tk.mvs_dev = tk.init_b = tk.init_s = None
+            if self._open.get(tk.stream) is tk:
+                del self._open[tk.stream]
+
+    def flush(self, shard: int | None = None):
+        """Dispatch every pending ticket (optionally one shard's) —
+        continuous batching: tickets submitted since the last flush form
+        the NEXT padded batch-signature groups while earlier batches are
+        still computing on device."""
+        todo = [tk for tk in self._pending
+                if not tk.done and (shard is None or tk.shard == shard)]
+        groups: dict[tuple, list[ChunkTicket]] = {}
+        for tk in todo:
+            key = (tk.shard, int(tk.types.shape[0]), *tk.hw)
+            groups.setdefault(key, []).append(tk)
+        for key in sorted(groups):
+            self._dispatch_group(key[0], groups[key])
+        self._pending = [tk for tk in self._pending if not tk.done]
+
+    def poll(self, ticket: ChunkTicket):
+        """Block until the ticket's chunk is finished and return per-frame
+        ``(boxes, scores, types)`` as host arrays — the ONE device->host
+        transfer on the chunk path."""
+        if ticket._host is None:
+            if not ticket.done:
+                self.flush()
+            boxes, scores = ticket._dev_out
+            ticket._host = (np.asarray(boxes), np.asarray(scores),
+                            ticket.types)
+            ticket._dev_out = None
+        return ticket._host
+
+    def poll_all(self, tickets):
+        """Flush once, then materialize every ticket."""
+        self.flush()
+        return [self.poll(tk) for tk in tickets]
+
+    # ------------------------------------------------------------------
+    def process_chunk(self, stream: int, t: int, packet: HybridPacket):
+        """Synchronous convenience wrapper: submit + flush + poll one
+        chunk.  Returns per-frame (boxes, scores, types).
+
+        All pipeline-①/② frames of the chunk go through ONE padded detector
+        invocation on the stream's OWN mesh shard instead of one dispatch
+        per frame; admission reads that shard's queue depths before the
+        chunk is enqueued (a hot shard defers its streams to pipeline-③
+        reuse without stalling the other shards), and pipeline ③ carries
+        the previous chunk's last detections across the chunk boundary.
+
+        With a fault schedule armed, the chunk first runs the delivery
+        ladder (loss/corruption → retries → reuse-hold/frame-skip) and a
+        stream in forced-reuse state routes the whole delivered chunk to
+        pipeline ③.  Returned ``types`` may then contain 0 (explicitly
+        skipped frames) alongside the usual 1/2/3.
+        """
+        return self.poll(self.submit_chunk(stream, t, packet))
+
+    def close(self):
+        """Tear down the dispatch plane: retire in-flight batches and shut
+        the hedge executor's thread pool.  Idempotent."""
+        for q in self._inflight.values():
+            while q:
+                jax.block_until_ready(q.popleft())
+        if self._hedge is not None:
+            self._hedge.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # -------------------------------------------- eviction and recovery
     def evict_shard(self, shard: int, t: int, reason: str = "straggler"):
-        """Remove a shard from service: queued requests re-home onto
-        survivor shards and future ``stream_shard`` routing skips it.
-        The LAST shard is never evicted (the plane degrades, it does not
-        abandon admitted streams)."""
+        """Remove a shard from service: queued requests AND pending
+        (undispatched) tickets re-home onto survivor shards; future
+        ``stream_shard`` routing skips it.  Batches already dispatched to
+        the evicted device are kept — their results are in flight and
+        identical, so admitted streams never lose work.  The LAST shard is
+        never evicted (the plane degrades, it does not abandon admitted
+        streams)."""
         if shard not in self.active_shards or len(self.active_shards) <= 1:
             return False
         self.pool.fail(shard)
         self.active_shards.remove(shard)
         moved = self.queues.remap_shards(self.stream_shard)
+        for tk in self._pending:
+            if not tk.done:
+                tk.shard = self.stream_shard(tk.stream)
         self.straggler.reset(shard)
         if self._hedge is not None:
             self._rebuild_hedge()

@@ -36,6 +36,11 @@ class ServingConfig:
     # shard defers its streams to pipeline-③ reuse instead of stalling
     # the global batch.
     n_shards: int = 1
+    # double-buffered chunk slots: how many dispatched detector batches
+    # may be outstanding per shard before the runtime retires the oldest
+    # (EdgeRuntime.flush) — 2 overlaps host scheduling of the next batch
+    # with the device computing the current one
+    max_inflight: int = 2
 
     @property
     def shard_capacity_fps(self) -> float:
@@ -48,7 +53,12 @@ class InferRequest:
     chunk_t: int
     frame_idx: int
     pipeline: int                    # 1 or 2
-    frame: np.ndarray
+    # the frame payload, or None for a LIGHTWEIGHT request whose frames
+    # are already staged on device (EdgeRuntime.submit_chunk): the queue
+    # entry then carries only the accounting/routing state (depths,
+    # admission, shard remap) and the owner gathers the staged plane at
+    # dispatch time.  ``drain``/``drain_fused`` require real frames.
+    frame: Optional[np.ndarray]
     shard: int = 0                   # owning mesh shard (stream % n_shards)
 
 
@@ -125,6 +135,18 @@ class PipelineQueues:
         else:
             outs = self.infer_fn(frames)[:n]
         return list(zip(batch, outs))
+
+    def take(self, reqs) -> int:
+        """Remove specific queued requests (by identity) WITHOUT executing
+        them — the async dispatcher gathers their staged device frames
+        itself (``EdgeRuntime._dispatch_group``) and only needs the queue
+        to forget them.  Requests not queued here are ignored.  Returns
+        the number removed."""
+        ids = {id(r) for r in reqs}
+        n0 = len(self.q1) + len(self.q2)
+        self.q1 = deque(r for r in self.q1 if id(r) not in ids)
+        self.q2 = deque(r for r in self.q2 if id(r) not in ids)
+        return n0 - len(self.q1) - len(self.q2)
 
     def remap_shards(self, mapper: Callable[[int], int]) -> int:
         """Rewrite every queued request's owning shard via

@@ -122,9 +122,21 @@ class HedgedExecutor:
         return self._run_wall(payload, primary, deadline)
 
     def close(self):
+        """Shut the lazy hedge thread pool down.  Idempotent — safe to
+        call on an executor that never hedged on wall clock.  Without
+        this, the 2 worker threads outlive the executor (they leaked
+        across EdgeRuntime lifecycles and test runs before the runtime
+        teardown path called it)."""
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 @dataclasses.dataclass

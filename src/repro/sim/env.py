@@ -409,6 +409,11 @@ class MultiStreamEnv:
 
         chunk_s = cfg.chunk_frames / cfg.fps
         results = [None] * self.C
+        # dispatch EVERY signature group before materializing any result:
+        # JAX async dispatch lets group k+1's host-side staging overlap
+        # group k's device computation; the np.asarray transfers below
+        # only happen once all groups are in flight
+        in_flight = []
         for sig, ids in group_by_signature(cfg.streams).items():
             if serve is not None:
                 ids = [c for c in ids if serve[c]]
@@ -436,6 +441,8 @@ class MultiStreamEnv:
                 bw_kbps=jnp.asarray([alloc[c] for c in ids], f32),
                 queue_delay=jnp.zeros((len(ids),), f32),
                 cfg=self._roundtrip_cfg())
+            in_flight.append((ids, out))
+        for ids, out in in_flight:
             for i, c in enumerate(ids):
                 types = np.asarray(out["types"][i])
                 bits = float(out["total_bits"][i])

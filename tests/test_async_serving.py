@@ -1,0 +1,177 @@
+"""Async continuous-batching serving plane (ISSUE 7 tentpole).
+
+The submit/flush/poll API must be a pure latency optimization: every
+result bit-equal to the synchronous ``process_chunk`` oracle, one
+device->host transfer per chunk (at the poll boundary), in-flight device
+work bounded by ``max_inflight``, and a clean teardown path that stops
+the hedge executor's threads.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.serving.straggler import HedgeConfig, HedgedExecutor
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mkrt(n_streams=2, **cfg_kw):
+    from repro.models import detection as D
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    return EdgeRuntime(ServingConfig(n_streams=n_streams, **cfg_kw),
+                       params, det_cfg)
+
+
+def _packet(seed=0, T=3):
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.sim.video_source import StreamConfig, generate_chunk
+    frames, _, _ = generate_chunk(
+        None, StreamConfig(height=32, width=48, seed=seed), 0, T)
+    return encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+
+
+def test_pad_bucket_power_of_two():
+    from repro.serving.runtime import _pad_bucket
+    assert [_pad_bucket(n, 4) for n in (1, 3, 4, 5, 8, 9)] == \
+        [4, 4, 4, 8, 8, 16]
+    assert _pad_bucket(1, 1) == 1 and _pad_bucket(3, 1) == 4
+
+
+def test_submit_poll_bit_equal_to_process_chunk_oracle():
+    """Three chunks of two streams through the async path — submitted
+    together, flushed as one cross-stream batch per round, polled late —
+    match the synchronous oracle bit for bit (boxes, scores, types),
+    including the pipeline-3 carry chain across chunk boundaries."""
+    rt, oracle = _mkrt(), _mkrt()
+    pkts = [_packet(seed=s) for s in range(2)]
+    for t in range(3):
+        tks = [rt.submit_chunk(s, t, pkts[s]) for s in range(2)]
+        assert not any(tk.done for tk in tks)
+        outs = rt.poll_all(tks)
+        for s, (boxes, scores, types) in enumerate(outs):
+            ob, os_, ot = oracle.process_chunk(s, t, pkts[s])
+            np.testing.assert_array_equal(types, ot)
+            np.testing.assert_array_equal(boxes, ob,
+                                          err_msg=f"stream {s} chunk {t}")
+            np.testing.assert_array_equal(scores, os_)
+    for s in range(2):
+        assert rt.stats[s].as_dict() == oracle.stats[s].as_dict()
+    rt.close(), oracle.close()
+
+
+def test_poll_out_of_order_and_cached():
+    """Tickets materialize in any order; the host transfer happens once
+    (repeat polls return the cached tuple)."""
+    rt = _mkrt(n_streams=3)
+    tks = [rt.submit_chunk(s, 0, _packet(seed=s)) for s in range(3)]
+    outs = [rt.poll(tk) for tk in reversed(tks)]
+    assert all(o[0].shape == outs[0][0].shape for o in outs)
+    for tk in tks:
+        assert tk._dev_out is None            # device refs dropped
+        assert rt.poll(tk) is tk._host        # cached, no second transfer
+    rt.close()
+
+
+def test_submit_enqueues_lightweight_requests_and_flush_takes_them():
+    """Pipeline-1/2 queue entries are bookkeeping-only (no frame payload
+    — frames stay staged on device) and are removed by the dispatch's
+    ``take``, so queue depths return to zero after every flush."""
+    rt = _mkrt()
+    tk = rt.submit_chunk(0, 0, _packet())
+    assert len(tk.reqs) == int(np.sum((tk.types == 1) | (tk.types == 2)))
+    assert all(r.frame is None for r in tk.reqs)
+    assert float(rt.queues.depths.sum()) == len(tk.reqs)
+    rt.flush()
+    assert float(rt.queues.depths.sum()) == 0.0
+    rt.poll(tk)
+    rt.close()
+
+
+def test_take_removes_only_named_requests():
+    from repro.serving.scheduler import (InferRequest, PipelineQueues,
+                                         ServingConfig)
+    q = PipelineQueues(ServingConfig(n_streams=2), lambda frames: [])
+    reqs = [InferRequest(0, 0, i, 1, None, shard=0) for i in range(3)]
+    for r in reqs:
+        q.submit(r)
+    assert q.take(reqs[:2]) == 2
+    assert list(q.q1) == [reqs[2]]
+    assert q.take(reqs[:2]) == 0              # already gone: no-op
+
+
+def test_double_buffer_caps_in_flight_batches():
+    """``max_inflight`` bounds the un-retired device batches per shard:
+    the dispatcher blocks on the OLDEST batch before issuing a new one.
+    Results stay bit-equal to the oracle while overlapped."""
+    rt = _mkrt(max_inflight=1)
+    oracle = _mkrt()
+    assert rt.max_inflight == 1
+    pkts = [_packet(seed=s) for s in range(2)]
+    for t in range(3):
+        tks = [rt.submit_chunk(s, t, pkts[s]) for s in range(2)]
+        rt.flush()
+        assert all(len(q) <= 1 for q in rt._inflight.values())
+        for s, tk in enumerate(tks):
+            np.testing.assert_array_equal(
+                rt.poll(tk)[0], oracle.process_chunk(s, t, pkts[s])[0])
+    rt.close(), oracle.close()
+    assert all(len(q) == 0 for q in rt._inflight.values())
+
+
+def test_submitting_next_chunk_flushes_previous_ticket():
+    """Per-stream ordering barrier: a stream's chunk t+1 submitted while
+    chunk t is still pending forces a flush first, keeping the carry
+    chain ordered."""
+    rt = _mkrt(n_streams=1)
+    pkt = _packet()
+    tk0 = rt.submit_chunk(0, 0, pkt)
+    tk1 = rt.submit_chunk(0, 1, pkt)
+    assert tk0.done and not tk1.done
+    b0 = rt.poll(tk0)[0]
+    oracle = _mkrt(n_streams=1)
+    np.testing.assert_array_equal(b0, oracle.process_chunk(0, 0, pkt)[0])
+    np.testing.assert_array_equal(rt.poll(tk1)[0],
+                                  oracle.process_chunk(0, 1, pkt)[0])
+    rt.close(), oracle.close()
+
+
+def test_runtime_context_manager_closes_hedge_pool():
+    """``EdgeRuntime`` teardown retires in-flight work and shuts the
+    hedge thread pool down (the pre-fix leak); both paths idempotent."""
+    with _mkrt() as rt:
+        rt.process_chunk(0, 0, _packet())
+        hedge = rt._hedge
+    assert all(len(q) == 0 for q in rt._inflight.values())
+    if hedge is not None:
+        assert hedge._pool is None
+    rt.close()                                # second close: no-op
+
+
+def test_hedged_executor_context_manager_shuts_down_pool():
+    with HedgedExecutor(HedgeConfig(min_history=1),
+                        [lambda x: x, lambda x: x]) as ex:
+        ex.lat.extend([1e-6] * 5)
+        out, _ = ex.run(7)                    # wall-clock path, may hedge
+        assert out == 7
+    assert ex._pool is None
+    ex.close()                                # idempotent
+
+
+def test_batch_submit_soak_report_matches_sync_soak():
+    """``run_soak(batch_submit=True)`` is control-equivalent to the
+    chunk-sequential soak: accounting, per-chunk fps series, and queue
+    state are identical (decisions are made at submit time in both)."""
+    from repro.serving.faults import SoakConfig, churn_schedule, run_soak
+    cfg = SoakConfig(n_streams=6, n_chunks=6, chunk_frames=3,
+                     gpu_capacity_fps=2000.0, content_groups=3, seed=11)
+    sched = churn_schedule(6, 6, seed=11)
+    a = run_soak(cfg, sched, batch_submit=True)
+    b = run_soak(cfg, sched, batch_submit=False)
+    assert a["accounting_ok"] and b["accounting_ok"]
+    assert a["queue_leaks"] == [] and b["queue_leaks"] == []
+    assert a["stream_stats"] == b["stream_stats"]
+    np.testing.assert_array_equal(a["delivered_fps"], b["delivered_fps"])
+    np.testing.assert_array_equal(a["infer_fps"], b["infer_fps"])

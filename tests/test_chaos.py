@@ -21,7 +21,8 @@ import pytest
 
 import conftest
 from repro.serving.faults import (FaultEvent, FaultSchedule, PRESETS,
-                                  SoakConfig, preset_schedule, run_soak)
+                                  SoakConfig, churn_schedule,
+                                  preset_schedule, run_soak)
 
 _FORCED = int(os.environ.get(conftest.FORCED_MULTIDEVICE_ENV, "0"))
 
@@ -405,3 +406,82 @@ def test_forced_runtime_eviction_serves_all_streams():
                                       err_msg=f"stream {s} diverged after "
                                               f"eviction")
     assert int(rt.deferred) == 0              # nobody was dropped
+
+
+# ------------------------------------------- many-stream churn (ISSUE 7)
+def test_churn_schedule_deterministic_and_validates():
+    a = churn_schedule(12, 32, seed=3)
+    b = churn_schedule(12, 32, seed=3)
+    assert a.events == b.events
+    assert a.events != churn_schedule(12, 32, seed=4).events
+    kinds = {e.kind for e in a.events}
+    assert {"join", "leave", "stall", "chunk_loss"} <= kinds
+    assert churn_schedule(12, 32, seed=3, loss_window=False).events == \
+        tuple(e for e in a.events if e.kind != "chunk_loss")
+    with pytest.raises(ValueError, match="n_chunks >= 4"):
+        churn_schedule(3, 8)
+
+
+def test_churn_soak_64stream_batch_submit_accounting_and_queues():
+    """The O(100)-stream acceptance soak: 64 churning streams through the
+    continuous-batching path.  Per-stream frame accounting must balance,
+    no request may be left in a pipeline queue after any chunk, and every
+    stream that was ever live must have been served."""
+    cfg = SoakConfig(n_streams=64, n_chunks=6, chunk_frames=3,
+                     gpu_capacity_fps=4000.0, content_groups=8, seed=7)
+    sched = churn_schedule(6, 64, seed=7)
+    rep = run_soak(cfg, sched, batch_submit=True)
+    assert rep["accounting_ok"]
+    assert rep["queue_leaks"] == []
+    served = 0
+    for c, s in rep["stream_stats"].items():
+        assert s["frames_in"] == (s["frames_inferred"] + s["frames_reused"]
+                                  + s["frames_skipped"]), (c, s)
+        served += s["frames_in"] > 0
+    ever_live = sum(any(sched.stream_active(c, t) for t in range(6))
+                    for c in range(64))
+    stalled_out = sum(all(sched.stalled(c, t) or not sched.stream_active(c, t)
+                          for t in range(6)) for c in range(64))
+    assert served >= ever_live - stalled_out
+    assert (rep["delivered_fps"] > 0).all()    # never a dead round
+
+
+@forced_only
+def test_forced_eviction_while_in_flight_bit_exact():
+    """Evict a shard BETWEEN submit and flush, with another shard's batch
+    already dispatched: the evicted shard's pending ticket re-homes to a
+    survivor, every stream still polls bit-exact vs the synchronous
+    no-fault oracle, and accounting balances."""
+    from repro.distributed.sharding import SINGLE_POD_RULES
+    from repro.models import detection as D
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(1), det_cfg)
+    mesh = jax.make_mesh((4,), ("data",))
+    scfg = ServingConfig(n_streams=4, gpu_capacity_fps=480.0)
+    rt = EdgeRuntime(scfg, params, det_cfg, mesh=mesh,
+                     rules=SINGLE_POD_RULES)
+    oracle = EdgeRuntime(ServingConfig(n_streams=4,
+                                       gpu_capacity_fps=480.0),
+                         params, det_cfg)
+    pkts = [_packet(seed=s) for s in range(4)]
+    tks = [rt.submit_chunk(s, 0, pkts[s]) for s in range(4)]
+    rt.flush(shard=rt.stream_shard(0))         # one batch already in flight
+    assert tks[0].done
+    victim = rt.stream_shard(2)
+    assert rt.evict_shard(victim, t=0)
+    assert victim not in rt.active_shards
+    assert tks[2].shard in rt.active_shards    # pending ticket re-homed
+    outs = rt.poll_all(tks)
+    for s, (boxes, scores, types) in enumerate(outs):
+        ob, os_, ot = oracle.process_chunk(s, 0, pkts[s])
+        np.testing.assert_array_equal(types, ot)
+        np.testing.assert_array_equal(boxes, np.asarray(ob),
+                                      err_msg=f"stream {s} diverged")
+        np.testing.assert_array_equal(scores, np.asarray(os_))
+    for s in range(4):
+        st = rt.stats[s]
+        assert st.frames_in == st.frames_inferred + st.frames_reused \
+            + st.frames_skipped
+    rt.close(), oracle.close()
