@@ -12,7 +12,7 @@ MD_ENV = XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 
 .PHONY: lint test test-codec test-chaos test-multidevice bench \
 	bench-smoke bench-chaos bench-async bench-async-smoke \
-	bench-multidevice
+	bench-multidevice bench-kernels kernel-trajectory
 
 # first CI gate (the CI lint job runs exactly this target).  ruff check
 # blocks; the formatter check is non-blocking (leading -) until a
@@ -68,3 +68,17 @@ bench-async:
 
 bench-async-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.async_serving --smoke
+
+# kernel/encoder micro-benches only (kernel_* / encoder_block_sad_* rows),
+# fresh timings vs the committed BENCH_pipeline.json baseline — the fast
+# way to see whether a kernel change won or regressed without the full
+# `make bench` harness
+bench-kernels:
+	PYTHONPATH=src $(PY) -m benchmarks.kernel_trajectory --run
+
+# compare the working-tree BENCH_pipeline.json against the committed one
+# (no bench execution; the CI bench-smoke job runs this after the smoke
+# harness rewrites the working-tree file).  Non-blocking on slowdowns,
+# blocking on ERROR rows.
+kernel-trajectory:
+	PYTHONPATH=src $(PY) -m benchmarks.kernel_trajectory

@@ -77,6 +77,41 @@ def roundtrip_bench():
                      f"fps:{fps:.0f};speedup_vs_twojit:"
                      f"{us_seq / max(us_fused, 1e-9):.2f}x"))
 
+    # ---- kernel + bf16 codec configs on the TIMED fused path (these were
+    # dead flags before: every headline row above ran the f32 fallback
+    # search).  Same batched jit, only RoundtripConfig.codec changes.
+    from repro.codec.video_codec import VideoCodecConfig
+    variant_counts = (1,) if SMOKE else (1, 4)
+    cfg_bf16 = RoundtripConfig(
+        level=3, det_cfg=det_cfg,
+        codec=VideoCodecConfig(use_kernel=True, dtype="bfloat16"))
+    cfg_diamond = RoundtripConfig(
+        level=3, det_cfg=det_cfg,
+        codec=VideoCodecConfig(use_kernel=True, search="diamond"))
+
+    def fused_with(cfg_v, S):
+        return roundtrip_batched(
+            raw[:S], gtb[:S], gtv[:S], params, tr1=sc["tr1"][:S],
+            tr2=sc["tr2"][:S], bw_kbps=sc["bw_kbps"][:S],
+            queue_delay=sc["queue_delay"][:S], cfg=cfg_v)
+
+    f32_us = {int(n.split("_")[2][:-6]): u for n, u, _ in rows
+              if n.startswith("roundtrip_fused_") and n.endswith("stream")}
+    for S in variant_counts:
+        us_bf = _timeit(lambda: fused_with(cfg_bf16, S), n=3)
+        ref = f32_us.get(S)
+        derived = "use_kernel+bf16"
+        if ref:
+            derived += f";vs_f32:{ref / max(us_bf, 1e-9):.2f}x"
+        rows.append((f"roundtrip_fused_{S}stream_bf16", us_bf, derived))
+    S_d = variant_counts[-1]
+    us_dia = _timeit(lambda: fused_with(cfg_diamond, S_d), n=3)
+    ref = f32_us.get(S_d)
+    derived = "use_kernel+diamond-search"
+    if ref:
+        derived += f";vs_f32_exhaustive:{ref / max(us_dia, 1e-9):.2f}x"
+    rows.append((f"roundtrip_fused_{S_d}stream_diamond", us_dia, derived))
+
     S = len(levels)
 
     def ladder():

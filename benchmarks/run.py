@@ -85,11 +85,25 @@ def kernel_microbench():
     us = _timeit(lambda: blockdct_quantize(blocks, 50.0, interpret=True),
                  n=2)
     rows.append(("kernel_blockdct_interp", us, "256blocks"))
+    from repro.codec.motion import block_sad, block_sad_scan
     from repro.kernels.motion_sad.ops import motion_sad
     cur = jax.random.uniform(ks[0], (64, 96), jnp.float32) * 255
     ref = jnp.roll(cur, (2, -3), (0, 1))
+    # oracle-relative columns: the kernel-trajectory CI summary tracks
+    # vs_scan / vs_fallback per PR so kernel regressions can't hide
+    scan = jax.jit(lambda c, r: block_sad_scan(c, r, 8))
+    us_scan = _timeit(lambda: scan(cur, ref), n=2)
+    fb = jax.jit(lambda c, r: block_sad(c, r, 8))
+    us_fb = _timeit(lambda: fb(cur, ref), n=2)
     us = _timeit(lambda: motion_sad(cur, ref, radius=8, interpret=True), n=2)
-    rows.append(("kernel_motion_sad_interp", us, "64x96r8"))
+    rows.append(("kernel_motion_sad_interp", us,
+                 f"64x96r8;vs_scan:{us_scan / max(us, 1e-9):.2f}x;"
+                 f"vs_fallback:{us_fb / max(us, 1e-9):.2f}x"))
+    us_d = _timeit(lambda: motion_sad(cur, ref, radius=8, interpret=True,
+                                      search="diamond"), n=2)
+    rows.append(("kernel_motion_sad_diamond_interp", us_d,
+                 f"64x96r8;evals:37/289;"
+                 f"vs_exhaustive_kernel:{us / max(us_d, 1e-9):.2f}x"))
     return rows
 
 
@@ -108,10 +122,16 @@ def realistic_shape_bench():
     ref = jnp.roll(cur, (3, -2), (0, 1))
     rows = []
     scan = jax.jit(lambda c, r: block_sad_scan(c, r, 8))
-    us = _timeit(lambda: scan(cur, ref), n=2)
-    rows.append((f"motion_sad_scan_{tag}", us, "r8scan289cand"))
+    us_scan = _timeit(lambda: scan(cur, ref), n=2)
+    rows.append((f"motion_sad_scan_{tag}", us_scan, "r8scan289cand"))
     us = _timeit(lambda: motion_sad(cur, ref, radius=8, interpret=True), n=2)
-    rows.append((f"kernel_motion_sad_interp_{tag}", us, "r8band"))
+    rows.append((f"kernel_motion_sad_interp_{tag}", us,
+                 f"r8band;vs_scan:{us_scan / max(us, 1e-9):.2f}x"))
+    us_d = _timeit(lambda: motion_sad(cur, ref, radius=8, interpret=True,
+                                      search="diamond"), n=2)
+    rows.append((f"kernel_motion_sad_diamond_interp_{tag}", us_d,
+                 f"r8;evals:37/289;"
+                 f"vs_exhaustive_kernel:{us / max(us_d, 1e-9):.2f}x"))
     mv = jax.random.randint(ks[1], (H // 16, W // 16, 2), -8, 9, jnp.int32)
     resid = jnp.zeros((H, W), jnp.float32)
     us = _timeit(lambda: qtransfer(cur, mv, resid, interpret=True), n=2)

@@ -1,7 +1,10 @@
-"""Block motion estimation (16×16 macroblocks, full search ±R integer pel).
+"""Block motion estimation (16×16 macroblocks, ±R integer pel).
 
-Three search paths with identical semantics (dy-major candidate order,
-first-wins tie-breaking):
+Two search STRATEGIES, each with a fallback and a Pallas-kernel path:
+
+``search="exhaustive"`` (default) — full ±R search over all (2R+1)²
+candidates, identical semantics across three implementations (dy-major
+candidate order, first-wins tie-breaking):
 
 * ``block_sad_scan`` — the legacy oracle: a ``lax.scan`` over candidate
   offsets, each step materializing a whole-frame shifted copy of the
@@ -11,11 +14,25 @@ first-wins tie-breaking):
   candidate loop slices inside those resident windows — no whole-frame
   copies, flat memory in the radius.
 * ``block_sad(use_kernel=True)`` — the Pallas TPU kernel in
-  ``repro.kernels.motion_sad`` (VMEM-resident padded reference, one
-  macroblock row per grid step).
+  ``repro.kernels.motion_sad`` (VMEM-resident padded reference, multiple
+  macroblock rows per grid step, candidates evaluated one dy-row chunk at
+  a time).
+
+``search="diamond"`` — traced coarse-to-fine (three-step / diamond)
+search: a STATIC step schedule (``diamond_steps``: largest power of two
+≤ R, halving to 1) probes the 3×3 neighbourhood of each macroblock's
+running best offset, clipped to ±R.  Evaluates 1 + 9·len(steps)
+candidates instead of (2R+1)² (37 vs 289 at R=8 — under ¼), all shapes
+static so the trace is jit-stable.  The found SAD is ≥ the exhaustive
+SAD by construction (the probe set is a subset of the exhaustive
+candidate set, and per-candidate SADs are computed identically); quality
+vs exhaustive is a documented tolerance contract (docs/fused_encoder.md),
+not bit-exactness.  ``block_sad_diamond`` is the pure-jnp form;
+``block_sad(search="diamond", use_kernel=True)`` routes to the Pallas
+diamond kernel (bit-exact MVs vs the fallback).
 
 ``dtype=jnp.bfloat16`` selects the bf16 storage variant (inputs cast to
-bf16, SADs accumulated in f32) on both the fallback and the kernel.
+bf16, SADs accumulated in f32) on both the fallbacks and the kernels.
 
 The warp (motion compensation) is the same block-gather primitive the
 hybrid decoder's quality transfer uses; its Pallas TPU kernel lives in
@@ -70,22 +87,30 @@ def block_sad_scan(cur, ref, radius: int = 8):
     return mv.astype(jnp.int32), best_sad
 
 
-def block_sad(cur, ref, radius: int = 8, *, use_kernel: bool = False,
-              dtype=None):
-    """Returns (mv (nby, nbx, 2) int32, sad (nby, nbx) f32).
+def diamond_steps(radius: int) -> tuple:
+    """Static step schedule of the coarse-to-fine search: the largest
+    power of two ≤ radius, halving down to 1.  Shared by the pure-jnp
+    fallback and the Pallas diamond kernel so probe order (and therefore
+    tie-breaking) is identical everywhere."""
+    s = 1
+    while s * 2 <= radius:
+        s *= 2
+    steps = []
+    while s >= 1:
+        steps.append(s)
+        s //= 2
+    return tuple(steps)
 
-    cur/ref: (H, W) with H, W multiples of 16.  ``use_kernel`` routes
-    through the Pallas kernel in ``repro.kernels.motion_sad`` (interpret
-    mode on CPU).  The default path gathers one (MB+2R)² search window per
-    macroblock and evaluates every candidate offset against those resident
-    windows — the same per-block form as the kernel, so memory stays flat
-    in the candidate count instead of materializing (2R+1)² whole-frame
-    shifted copies like ``block_sad_scan``.  ``dtype`` (e.g. bf16) is the
-    input storage dtype; SADs always accumulate in f32.
-    """
-    if use_kernel:
-        from repro.kernels.motion_sad.ops import motion_sad
-        return motion_sad(cur, ref, radius=radius, dtype=dtype)
+
+def diamond_num_evals(radius: int) -> int:
+    """Candidate evaluations the diamond search performs per macroblock
+    (center + 9 probes per step) — 37 at R=8 vs (2R+1)² = 289 exhaustive."""
+    return 1 + 9 * len(diamond_steps(radius))
+
+
+def _search_prelude(cur, ref, radius: int, dtype):
+    """Shared head of the fallback searches: per-macroblock current
+    blocks (f32) and the per-block (MB+2R)² resident search windows."""
     store = dtype or f32
     H, W = cur.shape
     nby, nbx = H // MB, W // MB
@@ -99,7 +124,71 @@ def block_sad(cur, ref, radius: int = 8, *, use_kernel: bool = False,
     bx = jnp.arange(nbx) * MB
     wins = jax.vmap(lambda y0: jax.vmap(
         lambda x0: lax.dynamic_slice(refp, (y0, x0), (win, win)))(bx))(by)
-    wins = wins.astype(f32)
+    return curb, wins.astype(f32), nby, nbx
+
+
+def block_sad_diamond(cur, ref, radius: int = 8, *, dtype=None):
+    """Traced coarse-to-fine search (pure-jnp form): (mv, sad) like
+    ``block_sad`` but evaluating only ``diamond_num_evals(radius)``
+    candidates per macroblock.  Every probe's SAD is computed by the SAME
+    slice-and-reduce expression the exhaustive fallback uses, so
+    SAD(diamond) ≥ SAD(exhaustive) holds exactly (subset of the candidate
+    set), and equals it whenever the greedy descent finds the global
+    minimum (smooth / translational content)."""
+    curb, wins, nby, nbx = _search_prelude(cur, ref, radius, dtype)
+
+    def slice_one(w, oy, ox):
+        return lax.dynamic_slice(w, (oy + radius, ox + radius), (MB, MB))
+
+    slice_all = jax.vmap(jax.vmap(slice_one))
+
+    def sad_at(offy, offx):
+        cand = slice_all(wins, offy, offx)        # (nby, nbx, MB, MB)
+        return jnp.abs(curb - cand).sum(axis=(2, 3))
+
+    zero = jnp.zeros((nby, nbx), jnp.int32)
+    best_y, best_x = zero, zero
+    best_sad = sad_at(zero, zero)
+    # static unroll: len(steps) rounds of 9 probes, dy-major, first-wins
+    for s in diamond_steps(radius):
+        cy, cx = best_y, best_x
+        for py in (-s, 0, s):
+            for px in (-s, 0, s):
+                oy = jnp.clip(cy + py, -radius, radius)
+                ox = jnp.clip(cx + px, -radius, radius)
+                sad = sad_at(oy, ox)
+                better = sad < best_sad
+                best_sad = jnp.where(better, sad, best_sad)
+                best_y = jnp.where(better, oy, best_y)
+                best_x = jnp.where(better, ox, best_x)
+    return jnp.stack([best_y, best_x], axis=-1).astype(jnp.int32), best_sad
+
+
+def block_sad(cur, ref, radius: int = 8, *, use_kernel: bool = False,
+              dtype=None, search: str = "exhaustive"):
+    """Returns (mv (nby, nbx, 2) int32, sad (nby, nbx) f32).
+
+    cur/ref: (H, W) with H, W multiples of 16.  ``use_kernel`` routes
+    through the Pallas kernels in ``repro.kernels.motion_sad`` (interpret
+    mode on CPU).  The default path gathers one (MB+2R)² search window per
+    macroblock and evaluates every candidate offset against those resident
+    windows — the same per-block form as the kernel, so memory stays flat
+    in the candidate count instead of materializing (2R+1)² whole-frame
+    shifted copies like ``block_sad_scan``.  ``dtype`` (e.g. bf16) is the
+    input storage dtype; SADs always accumulate in f32.  ``search``
+    selects the exhaustive full search or the traced diamond search (see
+    module docstring for the quality contract).
+    """
+    if search not in ("exhaustive", "diamond"):
+        raise ValueError(f"unknown search strategy {search!r} "
+                         "(expected 'exhaustive' or 'diamond')")
+    if use_kernel:
+        from repro.kernels.motion_sad.ops import motion_sad
+        return motion_sad(cur, ref, radius=radius, dtype=dtype,
+                          search=search)
+    if search == "diamond":
+        return block_sad_diamond(cur, ref, radius, dtype=dtype)
+    curb, wins, nby, nbx = _search_prelude(cur, ref, radius, dtype)
     offs = _offsets(radius)
 
     def step(carry, off):

@@ -16,8 +16,11 @@ vmaps it over a leading stream axis with the same shape discipline as
 ``repro.distributed.stream_sharding.shard_encode``.
 
 ``VideoCodecConfig.use_kernel`` routes the P-frame motion search through
-the ``motion_sad`` Pallas kernel; ``dtype="bfloat16"`` selects the bf16
-kernel/fallback variants (inputs stored bf16, SADs accumulated f32).
+the ``motion_sad`` Pallas kernels; ``dtype="bfloat16"`` selects the bf16
+kernel/fallback variants (inputs stored bf16, SADs accumulated f32);
+``search="diamond"`` swaps the exhaustive ±R full search for the traced
+coarse-to-fine diamond search (≈⅛ the candidate evaluations at R=8,
+quality-contract semantics — see docs/fused_encoder.md).
 
 Heterogeneous bitrate ladders: ``encode_chunk_ladder_batched`` encodes a
 mixed-rung stream set (different per-stream LR resolutions and QPs) in ONE
@@ -52,6 +55,7 @@ class VideoCodecConfig:
     gop: int = 30                # I-frame period
     use_kernel: bool = False     # P-frame search via the motion_sad kernel
     dtype: str = "float32"       # search storage dtype: float32 | bfloat16
+    search: str = "exhaustive"   # motion search strategy: exhaustive | diamond
 
     @property
     def search_dtype(self):
@@ -147,7 +151,8 @@ def _encode_iframe(frame, qtab, masks=None):
 def _encode_pframe(frame, ref_recon, qtab, cfg: VideoCodecConfig,
                    masks=None):
     mv, _ = M.block_sad(frame, ref_recon, cfg.search_radius,
-                        use_kernel=cfg.use_kernel, dtype=cfg.search_dtype)
+                        use_kernel=cfg.use_kernel, dtype=cfg.search_dtype,
+                        search=cfg.search)
     if masks is not None:
         mv = jnp.where(masks["mb"][..., None], mv, 0)
     pred = M.warp_blocks(ref_recon, mv)

@@ -1,23 +1,52 @@
-"""Full-search block-motion SAD kernel (Pallas TPU).
+"""Block-motion SAD kernels (Pallas TPU): exhaustive full search and a
+traced coarse-to-fine (diamond / three-step) search.
 
-One grid step produces one macroblock ROW of the MV field.  The padded
-reference frame is staged *whole* in VMEM (constant index map — resident
-across steps; 720p f32 padded by R=8 is (736, 1296) ≈ 3.6 MiB, inside the
-~16 MiB/core budget) and the current frame arrives one 16×W band at a time.
-Each of the (2R+1)² candidate offsets is evaluated against a 16×W band
-sliced from the resident reference — a VMEM-local dynamic slice — instead
-of the legacy ``lax.scan`` that materializes (2R+1)² whole-frame shifted
-copies through HBM.
+Tiling (reworked in the kernel speed pass): one grid step now produces
+MULTIPLE macroblock rows of the MV field.  ``_rows_per_step`` picks the
+largest row count whose resident working window — the row band plus its
+±R halo against the padded reference — stays inside ``_WINDOW_BUDGET``
+(512 KiB), which keeps the candidate loop L2-resident in interpret mode
+and leaves headroom under the ~16 MiB/core VMEM budget on TPU (the
+padded reference itself is staged whole via a constant index map:
+720p f32 padded by R=8 is (736, 1296) ≈ 3.6 MiB; use bf16 at 1080p).
+At small shapes (64×96) the whole frame is one grid step, so the
+per-step staging that used to dominate is paid exactly once.
 
-Candidate order is dy-major (idx = (dy+R)·(2R+1) + (dx+R)), identical to
-``repro.codec.motion._offsets``; the strict ``<`` best-update gives the
-same first-wins tie-breaking as the scan oracle, so MVs match bit-exactly.
+Candidate evaluation is a flat ``fori_loop`` over all (2R+1)² offsets,
+but the per-candidate reduce runs in a two-stage row-major layout
+(``(bh, nbx, MB).sum(-1)`` then ``(rows, MB, nbx).sum(1)``) that XLA:CPU
+vectorizes far better than the oracle's two-strided-axis reduce — this,
+not the loop structure, is where the kernel's speed over the scan oracle
+comes from.  The two-stage sum can differ from the oracle's summation
+order by float-rounding ULPs on non-integer inputs, so it is used for
+*selection only*: after the loop each grid step recomputes the winning
+candidate's SAD once in the oracle's per-block reduction order, making
+the returned (mv, sad) bit-exact vs ``block_sad_scan``.  (On
+integer-valued content ≤ 2²⁴ — i.e. real video pixels — every summation
+order is exact, so even selection is provably order-independent there;
+for continuous inputs a selection flip would need two distinct residual
+patterns whose exact f32 sums collide in one order but not the other.)
 
-``dtype=jnp.bfloat16`` selects the bf16 storage variant: cur/ref bands are
-staged in VMEM as bf16 — halving the resident footprint and doubling
-effective bandwidth at 1080p — while every SAD accumulates in f32 inside
-the kernel.  The 16×W band blocks satisfy the bf16 (16, 128) minimum tile
-(sublane 16 = MB; lane W is a multiple of 128 at ladder resolutions).
+Candidate order stays dy-major (idx = (dy+R)·(2R+1) + (dx+R)), identical
+to ``repro.codec.motion._offsets``, with a strict ``<`` best-update, so
+first-wins tie-breaking matches the scan oracle.
+
+``search="diamond"`` selects the traced coarse-to-fine kernel: a static
+step schedule (largest power of two ≤ R, halving to 1 — see
+``repro.codec.motion.diamond_steps``) probes a 3×3 neighbourhood around
+each macroblock's running best offset, clipped to ±R.  Every shape is
+static (the step count is baked into the trace), so the variant is
+jit-stable; it evaluates 1 + 9·len(steps) candidates per block instead of
+(2R+1)² and matches the pure-jnp fallback ``block_sad_diamond``
+bit-exactly on MVs.  Quality vs exhaustive is a documented tolerance
+contract (docs/fused_encoder.md), not bit-exactness.
+
+``dtype=jnp.bfloat16`` selects the bf16 storage variant on both kernels:
+cur/ref bands are staged in VMEM as bf16 — halving the resident footprint
+and doubling effective bandwidth at 1080p — while every SAD accumulates
+in f32 inside the kernel.  The 16×W band blocks satisfy the bf16
+(16, 128) minimum tile (sublane 16 = MB; lane W is a multiple of 128 at
+ladder resolutions).
 """
 from __future__ import annotations
 
@@ -25,69 +54,161 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
 MB = 16
 f32 = jnp.float32
 
+# per-grid-step resident working window budget: the (rows*MB + 2R) ×
+# (W + 2R) reference band the candidate loop repeatedly re-reads.  512 KiB
+# keeps it L2-resident on CPU interpret runs and is far under VMEM on TPU.
+_WINDOW_BUDGET = 512 * 1024
 
-def _kernel(cur_ref, refp_ref, sad_ref, idx_ref, *, radius: int, nbx: int,
-            width: int):
+
+def _rows_per_step(nby: int, width: int, radius: int, itemsize: int = 4,
+                   max_rows: int = 8) -> int:
+    """Largest macroblock-row count r ≤ max_rows dividing nby whose
+    resident reference window (r*MB + 2R, W + 2R) fits the budget."""
+    for r in range(min(nby, max_rows), 0, -1):
+        if nby % r:
+            continue
+        window = (r * MB + 2 * radius) * (width + 2 * radius) * itemsize
+        if window <= _WINDOW_BUDGET:
+            return r
+    return 1
+
+
+def _gather_sad(band, curb, offy, offx, radius: int):
+    """Per-block SAD at per-block offsets, in the oracle's per-block
+    reduction order.  band: (bh + 2R, W + 2R) resident reference slab;
+    curb: (rows, nbx, MB, MB); offy/offx: (rows, nbx) int32 in [-R, R]."""
+    rows, nbx = curb.shape[:2]
+    base_y = (jnp.arange(rows, dtype=jnp.int32) * MB)[:, None]
+    base_x = (jnp.arange(nbx, dtype=jnp.int32) * MB)[None, :]
+    ar = jnp.arange(MB, dtype=jnp.int32)
+    ys = (base_y + offy + radius)[..., None] + ar     # (rows, nbx, MB)
+    xs = (base_x + offx + radius)[..., None] + ar
+    cand = band[ys[..., :, None], xs[..., None, :]]   # (rows, nbx, MB, MB)
+    return jnp.abs(curb - cand).sum(axis=(2, 3))
+
+
+def _kernel(cur_ref, refp_ref, sad_ref, idx_ref, *, radius: int, rows: int,
+            nbx: int, width: int):
     i = pl.program_id(0)
-    cur = cur_ref[...].astype(f32)                      # (MB, W)
     side = 2 * radius + 1
+    bh = rows * MB
+    cur = cur_ref[...].astype(f32)                        # (bh, W)
 
-    def body(k, carry):
+    def body(idx, carry):
         best_sad, best_idx = carry
-        dy = k // side - radius
-        dx = k % side - radius
-        band = refp_ref[pl.dslice(radius + i * MB + dy, MB),
-                        pl.dslice(radius + dx, width)]  # (MB, W)
-        diff = jnp.abs(cur - band.astype(f32))
-        sad = diff.reshape(MB, nbx, MB).sum(axis=(0, 2))     # (nbx,)
+        dy, dx = idx // side, idx % side
+        win = refp_ref[pl.dslice(i * bh + dy, bh),
+                       pl.dslice(dx, width)].astype(f32)
+        d = jnp.abs(cur - win)
+        # two-stage row-major reduce: contiguous 16-wide inner sum, then
+        # the block-row sum — the layout XLA vectorizes.  Selection only;
+        # the winner's SAD is recomputed in oracle order below.
+        sad = d.reshape(bh, nbx, MB).sum(-1).reshape(rows, MB, nbx).sum(1)
         better = sad < best_sad
         return (jnp.where(better, sad, best_sad),
-                jnp.where(better, k.astype(jnp.int32), best_idx))
+                jnp.where(better, idx.astype(jnp.int32), best_idx))
 
-    init = (jnp.full((nbx,), jnp.inf, f32), jnp.zeros((nbx,), jnp.int32))
-    best_sad, best_idx = jax.lax.fori_loop(0, side * side, body, init)
-    sad_ref[...] = best_sad[None].astype(sad_ref.dtype)
-    idx_ref[...] = best_idx[None]
+    init = (jnp.full((rows, nbx), jnp.inf, f32),
+            jnp.zeros((rows, nbx), jnp.int32))
+    best_sad, best_idx = lax.fori_loop(0, side * side, body, init)
+
+    # one oracle-order evaluation of the winning candidate per block, so
+    # the returned SAD is bit-exact vs block_sad_scan
+    band = refp_ref[pl.dslice(i * bh, bh + 2 * radius),
+                    pl.dslice(0, width + 2 * radius)].astype(f32)
+    curb = cur.reshape(rows, MB, nbx, MB).transpose(0, 2, 1, 3)
+    sad_ref[...] = _gather_sad(band, curb, best_idx // side - radius,
+                               best_idx % side - radius, radius)
+    idx_ref[...] = best_idx
+
+
+def _diamond_kernel(cur_ref, refp_ref, sad_ref, mv_ref, *, radius: int,
+                    rows: int, nbx: int, width: int, steps: tuple):
+    i = pl.program_id(0)
+    bh = rows * MB
+    cur = cur_ref[...].astype(f32)                        # (bh, W)
+    band = refp_ref[pl.dslice(i * bh, bh + 2 * radius),
+                    pl.dslice(0, width + 2 * radius)].astype(f32)
+    curb = cur.reshape(rows, MB, nbx, MB).transpose(0, 2, 1, 3)
+
+    zero = jnp.zeros((rows, nbx), jnp.int32)
+    best_y, best_x = zero, zero
+    best_sad = _gather_sad(band, curb, zero, zero, radius)
+    # static unroll: len(steps) rounds of 9 probes, dy-major, first-wins
+    for s in steps:
+        cy, cx = best_y, best_x
+        for py in (-s, 0, s):
+            for px in (-s, 0, s):
+                oy = jnp.clip(cy + py, -radius, radius)
+                ox = jnp.clip(cx + px, -radius, radius)
+                sad = _gather_sad(band, curb, oy, ox, radius)
+                better = sad < best_sad
+                best_sad = jnp.where(better, sad, best_sad)
+                best_y = jnp.where(better, oy, best_y)
+                best_x = jnp.where(better, ox, best_x)
+    sad_ref[...] = best_sad.astype(sad_ref.dtype)
+    mv_ref[...] = jnp.stack([best_y, best_x], axis=-1)
 
 
 def motion_sad_rows(cur, ref, *, radius: int = 8, interpret: bool = False,
-                    dtype=None):
+                    dtype=None, search: str = "exhaustive"):
     """cur/ref: (H, W) with H, W multiples of 16.
 
     Returns (mv (nby, nbx, 2) int32, sad (nby, nbx) f32) — the codec
     convention pred(y) = ref(y + mv), matching ``repro.codec.motion``.
     ``dtype`` is the VMEM storage dtype of the staged operands (bf16
     halves the resident reference); SADs accumulate in f32 regardless.
+    ``search`` picks exhaustive ±R full search (bit-exact vs the scan
+    oracle) or the traced diamond search (subset of the candidate set,
+    quality-contract semantics).
     """
     store = dtype or f32
     H, W = cur.shape
     nby, nbx = H // MB, W // MB
+    rows = _rows_per_step(nby, W, radius, jnp.dtype(store).itemsize)
     refp = jnp.pad(ref.astype(store), radius, mode="edge")
 
-    kernel = functools.partial(_kernel, radius=radius, nbx=nbx, width=W)
-    sad, idx = pl.pallas_call(
+    if search == "exhaustive":
+        kernel = functools.partial(_kernel, radius=radius, rows=rows,
+                                   nbx=nbx, width=W)
+    elif search == "diamond":
+        from repro.codec.motion import diamond_steps
+        kernel = functools.partial(_diamond_kernel, radius=radius,
+                                   rows=rows, nbx=nbx, width=W,
+                                   steps=diamond_steps(radius))
+    else:
+        raise ValueError(f"unknown search strategy {search!r} "
+                         "(expected 'exhaustive' or 'diamond')")
+
+    out_specs = [pl.BlockSpec((rows, nbx), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((nby, nbx), f32)]
+    if search == "diamond":
+        out_specs.append(pl.BlockSpec((rows, nbx, 2), lambda i: (i, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nby, nbx, 2), jnp.int32))
+    else:
+        out_specs.append(pl.BlockSpec((rows, nbx), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nby, nbx), jnp.int32))
+
+    sad, out = pl.pallas_call(
         kernel,
-        grid=(nby,),
+        grid=(nby // rows,),
         in_specs=[
-            pl.BlockSpec((MB, W), lambda i: (i, 0)),
+            pl.BlockSpec((rows * MB, W), lambda i: (i, 0)),
             pl.BlockSpec((H + 2 * radius, W + 2 * radius), lambda i: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, nbx), lambda i: (i, 0)),
-            pl.BlockSpec((1, nbx), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nby, nbx), f32),
-            jax.ShapeDtypeStruct((nby, nbx), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(cur.astype(store), refp)
 
+    if search == "diamond":
+        return out, sad
     side = 2 * radius + 1
-    mv = jnp.stack([idx // side - radius, idx % side - radius], axis=-1)
+    mv = jnp.stack([out // side - radius, out % side - radius], axis=-1)
     return mv.astype(jnp.int32), sad

@@ -12,19 +12,22 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("radius", "interpret", "dtype"))
+@partial(jax.jit, static_argnames=("radius", "interpret", "dtype", "search"))
 def motion_sad(cur, ref, *, radius: int = 8, interpret: bool | None = None,
-               dtype=None):
+               dtype=None, search: str = "exhaustive"):
     """cur/ref: (H, W) or (T, H, W) -> (mv, sad).
 
     mv: (..., nby, nbx, 2) int32; sad: (..., nby, nbx) f32.  ``dtype``
     selects the VMEM storage variant (bf16 stages operands half-width;
-    SADs still accumulate in f32).
+    SADs still accumulate in f32).  ``search`` routes to the exhaustive
+    ±R kernel (default, bit-exact vs the scan oracle) or the traced
+    diamond-search kernel (static step schedule, subset of the candidate
+    set — see ``repro.codec.motion.diamond_steps``).
     """
     if interpret is None:
         interpret = not on_tpu()
     fn = partial(motion_sad_rows, radius=radius, interpret=interpret,
-                 dtype=dtype)
+                 dtype=dtype, search=search)
     if cur.ndim == 3:
         return jax.vmap(fn)(cur, ref)
     return fn(cur, ref)

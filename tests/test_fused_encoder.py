@@ -15,10 +15,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
+from jax import lax
 
 import conftest
 from repro.codec.motion import (MB, accumulate_mv, block_sad, block_sad_scan,
-                                warp_blocks)
+                                diamond_num_evals, diamond_steps, warp_blocks)
+from repro.kernels.motion_sad.ops import motion_sad
 from repro.codec.rate_model import QUALITY_LADDER, downscale, ladder_lr_shape
 from repro.codec.video_codec import (VideoCodecConfig, encode_chunk,
                                      encode_chunk_batched,
@@ -138,6 +140,172 @@ def test_accumulate_mv_chaining_matches_sequential(T, split, seed):
     chained = jnp.concatenate([acc_a, acc_a[-1][None] + accumulate_mv(b)]
                               if b.shape[0] else [acc_a], axis=0)
     np.testing.assert_array_equal(np.asarray(chained), acc)
+
+
+# ------------------------------------------- diamond search (quality contract)
+def _translated_pair(field, dy, dx, H, W, margin=MB):
+    """cur and an EXACT (dy, dx)-translated ref cut from one oversized
+    field — no wraparound, so interior macroblocks have a true zero-SAD
+    candidate at (dy, dx).  Border blocks still see edge-replicated
+    padding instead of the real field, hence the interior restriction in
+    the assertions below."""
+    cur = lax.dynamic_slice(field, (margin, margin), (H, W))
+    ref = lax.dynamic_slice(field, (margin - dy, margin - dx), (H, W))
+    return cur, ref
+
+
+def _interior(a):
+    return np.asarray(a)[1:-1, 1:-1]
+
+
+@settings(deadline=None, max_examples=10)
+@given(nby=st.integers(1, 4), nbx=st.integers(1, 5),
+       radius=st.sampled_from([2, 4, 8]), seed=st.integers(0, 9999))
+def test_block_sad_diamond_never_beats_exhaustive_property(nby, nbx, radius,
+                                                           seed):
+    """Diamond probes a SUBSET of the exhaustive candidate set with the
+    identical per-candidate SAD expression, so its found SAD is ≥ the
+    exhaustive minimum EXACTLY (no fp tolerance), and ≤ its own (0, 0)
+    starting point (strict-< updates only improve) — on any content,
+    including adversarial noise where the greedy descent traps."""
+    H, W = nby * MB, nbx * MB
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cur = jax.random.uniform(k1, (H, W), jnp.float32) * 255
+    ref = jnp.roll(cur, (seed % 5 - 2, -(seed % 7 - 3)), (0, 1)) \
+        + jax.random.normal(k2, (H, W)) * 4
+    _, sad_e = block_sad(cur, ref, radius)
+    _, sad_d = block_sad(cur, ref, radius, search="diamond")
+    assert (np.asarray(sad_d) >= np.asarray(sad_e)).all()
+    sad_zero = np.asarray(_block_sads(cur, ref))   # the (0, 0) candidate
+    assert (np.asarray(sad_d) <= sad_zero + 1e-3).all()
+
+
+@settings(deadline=None, max_examples=12)
+@given(radius=st.sampled_from([2, 4, 8]), ringy=st.integers(-1, 1),
+       ringx=st.integers(-1, 1), seed=st.integers(0, 9999))
+def test_block_sad_diamond_first_ring_translation_exact_property(
+        radius, ringy, ringx, seed):
+    """A translation on the first diamond ring ({-s0, 0, s0}², s0 the
+    largest power of two ≤ R) is found EXACTLY on any non-periodic
+    content: the zero-SAD candidate is probed in round one and strict-<
+    makes it absorbing.  MVs and SADs equal the exhaustive search
+    bit-for-bit (integer-valued frames keep every summation order exact)."""
+    s0 = diamond_steps(radius)[0]
+    dy, dx = ringy * s0, ringx * s0
+    H, W = 64, 96
+    field = jnp.round(jax.random.uniform(jax.random.PRNGKey(seed),
+                                         (H + 2 * MB, W + 2 * MB)) * 255)
+    cur, ref = _translated_pair(field, dy, dx, H, W)
+    mv_d, sad_d = block_sad(cur, ref, radius, search="diamond")
+    mv_e, sad_e = block_sad(cur, ref, radius)
+    assert (_interior(mv_d) == (dy, dx)).all()
+    assert (_interior(sad_d) == 0).all()
+    np.testing.assert_array_equal(_interior(mv_d), _interior(mv_e))
+    np.testing.assert_array_equal(_interior(sad_d), _interior(sad_e))
+
+
+def test_diamond_candidate_budget():
+    """The acceptance contract: ≤ ¼ of the exhaustive candidate count at
+    the production radius (37 vs 289 at ±8), and the static schedule halves
+    down to a final 1-pel refinement ring at every radius."""
+    assert diamond_num_evals(8) * 4 <= 17 * 17
+    for radius in (2, 4, 8, 16):
+        steps = diamond_steps(radius)
+        assert steps[0] * 2 > radius and steps[-1] == 1
+        assert all(a == 2 * b for a, b in zip(steps, steps[1:]))
+        assert diamond_num_evals(radius) == 1 + 9 * len(steps)
+
+
+@settings(deadline=None, max_examples=10)
+@given(nby=st.integers(1, 3), nbx=st.integers(1, 4),
+       radius=st.sampled_from([2, 4, 8]), seed=st.integers(0, 9999),
+       bf16=st.booleans())
+def test_motion_sad_diamond_kernel_matches_fallback_property(nby, nbx,
+                                                             radius, seed,
+                                                             bf16):
+    """The Pallas diamond kernel replays the fallback's probe schedule
+    (same order, same clip, same first-wins) — MVs and SADs bit-exact on
+    integer content in BOTH storage dtypes."""
+    H, W = nby * MB, nbx * MB
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cur = jnp.round(jax.random.uniform(k1, (H, W)) * 255)
+    ref = jnp.round(jnp.clip(jnp.roll(cur, (seed % 3 - 1, seed % 5 - 2),
+                                      (0, 1))
+                             + jax.random.normal(k2, (H, W)) * 2, 0, 255))
+    dt = jnp.bfloat16 if bf16 else None
+    mv_f, sad_f = block_sad(cur, ref, radius, search="diamond", dtype=dt)
+    mv_k, sad_k = block_sad(cur, ref, radius, search="diamond", dtype=dt,
+                            use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_f))
+    np.testing.assert_array_equal(np.asarray(sad_k), np.asarray(sad_f))
+
+
+def test_block_sad_rejects_unknown_search():
+    cur = jnp.zeros((32, 32), jnp.float32)
+    with pytest.raises(ValueError, match="unknown search strategy"):
+        block_sad(cur, cur, 4, search="hexagon")
+
+
+# ----------------------------------- retiled exhaustive kernel bit-exactness
+@settings(deadline=None, max_examples=12)
+@given(nby=st.integers(1, 4), nbx=st.integers(1, 5),
+       radius=st.sampled_from([2, 4, 8]), seed=st.integers(0, 9999),
+       bf16=st.booleans())
+def test_motion_sad_kernel_bit_exact_vs_scan_property(nby, nbx, radius,
+                                                      seed, bf16):
+    """The retiled kernel (multi-row grid steps, fast two-stage selection
+    reduce + oracle-order winner recompute) reproduces ``block_sad_scan``
+    bit-for-bit — MVs including tie-breaks AND SADs — on integer-valued
+    (real-video-domain) frames, where every f32 summation order is exact.
+    bf16 storage is lossless for 0..255 integers, so even the bf16 kernel
+    must match the f32 scan oracle exactly."""
+    H, W = nby * MB, nbx * MB
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cur = jnp.round(jax.random.uniform(k1, (H, W)) * 255)
+    ref = jnp.round(jnp.clip(jnp.roll(cur, (seed % 5 - 2, seed % 7 - 3),
+                                      (0, 1))
+                             + jax.random.normal(k2, (H, W)) * 3, 0, 255))
+    mv_s, sad_s = block_sad_scan(cur, ref, radius)
+    mv_k, sad_k = motion_sad(cur, ref, radius=radius, interpret=True,
+                             dtype=jnp.bfloat16 if bf16 else None)
+    np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_s))
+    np.testing.assert_array_equal(np.asarray(sad_k), np.asarray(sad_s))
+
+
+@settings(deadline=None, max_examples=8)
+@given(nby=st.integers(1, 3), nbx=st.integers(1, 4),
+       radius=st.sampled_from([2, 4]), period=st.integers(1, 7),
+       vertical=st.booleans())
+def test_motion_sad_kernel_tie_breaking_property(nby, nbx, radius, period,
+                                                 vertical):
+    """Periodic stripes tie whole bands of candidates; the kernel's
+    selection loop must resolve them first-wins in dy-major order exactly
+    like the scan oracle — the case a fast-but-reordered reduce would
+    silently break."""
+    H, W = nby * MB, nbx * MB
+    ramp = (jnp.arange(H if vertical else W) % period).astype(jnp.float32)
+    frame = jnp.tile(ramp[:, None], (1, W)) if vertical \
+        else jnp.tile(ramp[None, :], (H, 1))
+    mv_k, sad_k = motion_sad(frame, frame, radius=radius, interpret=True)
+    mv_s, sad_s = block_sad_scan(frame, frame, radius)
+    np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_s))
+    np.testing.assert_array_equal(np.asarray(sad_k), np.asarray(sad_s))
+
+
+@pytest.mark.parametrize("H,W,radius", [(64, 96, 8), (80, 112, 4),
+                                        (32, 48, 2)])
+def test_motion_sad_kernel_matches_scan_continuous(H, W, radius):
+    """Deterministic continuous-f32 fixtures: MVs bit-exact, SADs to fp
+    tolerance (the winner recompute replays the oracle's per-block reduce
+    order, so in practice these are bit-equal too)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    cur = jax.random.uniform(k1, (H, W), jnp.float32) * 255
+    ref = jnp.roll(cur, (3, -2), (0, 1)) + jax.random.normal(k2, (H, W)) * 2
+    mv_s, sad_s = block_sad_scan(cur, ref, radius)
+    mv_k, sad_k = motion_sad(cur, ref, radius=radius, interpret=True)
+    np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_s))
+    np.testing.assert_allclose(np.asarray(sad_k), np.asarray(sad_s),
+                               rtol=1e-6, atol=1e-4)
 
 
 # ------------------------------------------------------ encoder edge cases
