@@ -12,15 +12,14 @@ MD_ENV = XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 
 .PHONY: lint test test-codec test-chaos test-multidevice bench \
 	bench-smoke bench-chaos bench-async bench-async-smoke \
-	bench-multidevice bench-kernels kernel-trajectory
+	bench-multidevice bench-kernels kernel-trajectory check-bench-errors
 
-# first CI gate (the CI lint job runs exactly this target).  ruff check
-# blocks; the formatter check is non-blocking (leading -) until a
-# dedicated `ruff format` commit establishes the baseline — flip it to
-# blocking there.  Config in ruff.toml.
+# first CI gate (the CI lint job runs exactly this target).  Both checks
+# block: ruff check AND ruff format --check (baseline established — any
+# unformatted file fails the job).  Config in ruff.toml.
 lint:
 	ruff check src tests benchmarks
-	-ruff format --check src tests benchmarks
+	ruff format --check src tests benchmarks
 
 # PYTEST_FLAGS hooks extra options in without forking the command line —
 # CI's latest-jax leg passes --cov=repro --cov-report=xml here (pytest-cov
@@ -29,10 +28,12 @@ test:
 	PYTHONPATH=src $(PY) -m pytest -x -q $(PYTEST_FLAGS)
 
 # codec/encoder regression net: golden vectors + property tests + kernels
+# + the ROI gate (its bit-exactness contract rides the codec statistics)
 test-codec:
 	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_codec.py \
 		tests/test_codec_golden.py tests/test_fused_encoder.py \
-		tests/test_fused_pipeline.py tests/test_kernels.py
+		tests/test_fused_pipeline.py tests/test_kernels.py \
+		tests/test_roi.py
 
 # chaos/robustness net: fault-schedule semantics + closed-loop soak
 test-chaos:
@@ -82,3 +83,10 @@ bench-kernels:
 # blocking on ERROR rows.
 kernel-trajectory:
 	PYTHONPATH=src $(PY) -m benchmarks.kernel_trajectory
+
+# scan bench artifacts (BENCH_pipeline/chaos/async.json) for failure
+# evidence — ERROR rows, soak error lists, bad chaos presets — and exit
+# non-zero with a listing.  CI runs it in every bench job with the job's
+# artifacts as ARGS (explicitly-named files must exist).
+check-bench-errors:
+	PYTHONPATH=src $(PY) -m benchmarks.check_bench_errors $(ARGS)

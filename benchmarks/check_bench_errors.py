@@ -1,0 +1,108 @@
+"""Bench-artifact ERROR gate: ``python -m benchmarks.check_bench_errors
+[artifact.json ...]``.
+
+The bench jobs each write a machine-readable artifact
+(``BENCH_pipeline.json`` / ``BENCH_chaos.json`` / ``BENCH_async.json``),
+and each harness already exits non-zero on ITS OWN failures — but a row
+that errored in a non-smoke run, or an artifact written by a harness
+that was later killed, used to land in the repo as data that nothing
+re-read.  This gate closes that hole: it scans every given artifact for
+failure evidence and exits non-zero with a listing, so CI fails on ERROR
+rows from ALL bench artifacts rather than only on the harness's own
+exit code.
+
+Understands both payload schemas:
+
+  * ``biswift-bench-v2`` (pipeline + async): a row whose ``derived`` or
+    ``params`` starts with ``ERROR`` is a bench that stopped executing;
+    a non-empty top-level ``errors`` list (the async soak's invariant
+    violations) blocks too.
+  * ``biswift-chaos-v1``: a non-empty ``errors`` list blocks, and each
+    preset report is re-checked (``accounting_ok``/``recovery_ok`` false
+    or ``queue_leaks > 0``) so a stale errors list can't mask a bad
+    preset.
+
+Files passed explicitly must exist; with no arguments the three default
+artifacts are scanned and missing ones are skipped (a local tree usually
+has only the committed BENCH_pipeline.json).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DEFAULT_ARTIFACTS = ("BENCH_pipeline.json", "BENCH_chaos.json",
+                     "BENCH_async.json")
+
+
+def _check_rows(payload: dict, path: str) -> list[str]:
+    problems = []
+    for r in payload.get("rows", []):
+        name = str(r.get("name", "?"))
+        for field in ("derived", "params"):
+            v = r.get(field)
+            if isinstance(v, str) and v.startswith("ERROR"):
+                problems.append(f"{path}: row {name}: {v[:120]}")
+                break
+    return problems
+
+
+def _check_chaos(payload: dict, path: str) -> list[str]:
+    problems = []
+    for p in payload.get("presets", []):
+        name = str(p.get("preset", "?"))
+        if not p.get("accounting_ok", True):
+            problems.append(f"{path}: preset {name}: accounting leak")
+        if not p.get("recovery_ok", True):
+            problems.append(f"{path}: preset {name}: fps did not recover")
+        if p.get("queue_leaks", 0):
+            problems.append(
+                f"{path}: preset {name}: {p['queue_leaks']} queue leaks")
+    return problems
+
+
+def check_artifact(path: str) -> list[str]:
+    """Failure evidence found in one artifact (empty list = clean)."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except json.JSONDecodeError as e:
+        return [f"{path}: unparseable JSON ({e})"]
+    if not isinstance(payload, dict):
+        return [f"{path}: unexpected payload type {type(payload).__name__}"]
+    problems = _check_rows(payload, path)
+    problems += _check_chaos(payload, path)
+    for err in payload.get("errors", []):
+        problems.append(f"{path}: {err}")
+    return problems
+
+
+def main() -> int:
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    explicit = bool(args)
+    paths = args or list(DEFAULT_ARTIFACTS)
+
+    problems, scanned = [], []
+    for path in paths:
+        if not os.path.exists(path):
+            if explicit:
+                problems.append(f"{path}: artifact missing")
+            else:
+                print(f"# {path} not present — skipped")
+            continue
+        scanned.append(path)
+        problems.extend(check_artifact(path))
+
+    for p in problems:
+        print(f"BLOCKING: {p}")
+    if problems:
+        print(f"# bench-error gate FAILED: {len(problems)} problem(s) "
+              f"across {len(scanned)} artifact(s)")
+        return 1
+    print(f"# bench-error gate clean: {len(scanned)} artifact(s) scanned")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -74,6 +74,20 @@ def encoder_bench():
                  f"{evals};vs_scan:{us_scan / max(us_dk, 1e-9):.2f}x;"
                  f"vs_fallback:{us_d / max(us_dk, 1e-9):.2f}x"))
 
+    # ---- diamond DISPATCH (block_sad with use_kernel=True): below
+    # ~256 macroblocks the kernel trails the traced descent, so block_sad
+    # statically routes small canvases to the fallback — this row must
+    # track the fallback row above (vs_best ~1.0x), where the raw kernel
+    # row trails it.  The 720p-shaped twin lives in
+    # realistic_shape_bench (there the kernel side of the dispatch wins).
+    disp = jax.jit(lambda c, r: block_sad(c, r, radius, use_kernel=True,
+                                          search="diamond"))
+    us_disp = _timeit(lambda: disp(cur, ref), n=3)
+    rows.append((f"encoder_block_sad_diamond_dispatch_{H}x{W}", us_disp,
+                 f"{evals};routed:fallback;"
+                 f"vs_fallback:{us_d / max(us_disp, 1e-9):.2f}x;"
+                 f"vs_kernel:{us_dk / max(us_disp, 1e-9):.2f}x"))
+
     # ---- chunk encode: single jit vs batched vmap over 1..4 streams
     cfg = VideoCodecConfig(quality=50.0, search_radius=radius)
     us_one = _timeit(lambda: encode_chunk(frames4[0], cfg), n=3)

@@ -132,6 +132,22 @@ def realistic_shape_bench():
     rows.append((f"kernel_motion_sad_diamond_interp_{tag}", us_d,
                  f"r8;evals:37/289;"
                  f"vs_exhaustive_kernel:{us / max(us_d, 1e-9):.2f}x"))
+    # static diamond dispatch at a realistic block count (720p = 3600
+    # macroblocks): on CPU CI this routes to the traced descent (interpret
+    # mode loses at every shape), on TPU to the kernel — either way the
+    # row must track the fallback row (vs_fallback ~1.0x or better).  The
+    # small-canvas twin is encoder_block_sad_diamond_dispatch_64x96.
+    from repro.codec.motion import (block_sad, block_sad_diamond,
+                                    diamond_kernel_profitable)
+    routed = "kernel" if diamond_kernel_profitable(H, W) else "fallback"
+    fb_dia = jax.jit(lambda c, r: block_sad_diamond(c, r, 8))
+    us_fbd = _timeit(lambda: fb_dia(cur, ref), n=2)
+    disp = jax.jit(lambda c, r: block_sad(c, r, 8, use_kernel=True,
+                                          search="diamond"))
+    us_disp = _timeit(lambda: disp(cur, ref), n=2)
+    rows.append((f"motion_sad_diamond_dispatch_{tag}", us_disp,
+                 f"routed:{routed};"
+                 f"vs_fallback:{us_fbd / max(us_disp, 1e-9):.2f}x"))
     mv = jax.random.randint(ks[1], (H // 16, W // 16, 2), -8, 9, jnp.int32)
     resid = jnp.zeros((H, W), jnp.float32)
     us = _timeit(lambda: qtransfer(cur, mv, resid, interpret=True), n=2)
@@ -297,12 +313,12 @@ def main() -> None:
     from benchmarks.figures import ALL
     from benchmarks.bilevel import bilevel_bench
     from benchmarks.encoder import encoder_bench
-    from benchmarks.roundtrip import roundtrip_bench
+    from benchmarks.roundtrip import roundtrip_bench, roundtrip_roi_bench
     benches = list(ALL.items()) + [
         (fn.__name__, fn)
         for fn in (kernel_microbench, realistic_shape_bench, pipeline_bench,
                    codec_bench, encoder_bench, roundtrip_bench,
-                   bilevel_bench, stream_sharding_bench,
+                   roundtrip_roi_bench, bilevel_bench, stream_sharding_bench,
                    roundtrip_sharding_bench, roofline_summary)]
     for name, fn in benches:
         try:

@@ -47,6 +47,25 @@ from jax import lax
 
 f32 = jnp.float32
 MB = 16  # macroblock size
+# below this many macroblocks the diamond KERNEL loses to the traced
+# descent (per-probe dispatch overhead is amortized over too few
+# blocks).  720p is 3600 blocks, the 64x96 bench canvas is 24.
+_DIAMOND_KERNEL_MIN_BLOCKS = 256
+
+
+def diamond_kernel_profitable(H: int, W: int) -> bool:
+    """Static dispatch predicate for ``block_sad(use_kernel=True,
+    search="diamond")``: route to the Pallas kernel only where it can
+    win.  Two static facts decide it — the macroblock count (small
+    canvases can't amortize the per-probe kernel dispatch: 0.82x vs the
+    traced descent at 64x96) and the backend (in interpret mode the
+    kernel's probe loop runs as host Python per grid step, which loses to
+    the traced descent at EVERY shape — measured ~0.8x even at 720p).
+    Both are known at trace time, so the dispatch never retraces."""
+    if (H // MB) * (W // MB) < _DIAMOND_KERNEL_MIN_BLOCKS:
+        return False
+    from repro.kernels.motion_sad.ops import on_tpu
+    return on_tpu()
 
 
 def _offsets(radius: int):
@@ -182,6 +201,11 @@ def block_sad(cur, ref, radius: int = 8, *, use_kernel: bool = False,
     if search not in ("exhaustive", "diamond"):
         raise ValueError(f"unknown search strategy {search!r} "
                          "(expected 'exhaustive' or 'diamond')")
+    if use_kernel and search == "diamond" \
+            and not diamond_kernel_profitable(*cur.shape):
+        # both variants share the probe schedule and SAD expression, so
+        # results are identical either way — this is purely a perf route
+        return block_sad_diamond(cur, ref, radius, dtype=dtype)
     if use_kernel:
         from repro.kernels.motion_sad.ops import motion_sad
         return motion_sad(cur, ref, radius=radius, dtype=dtype,

@@ -152,7 +152,8 @@ def anchor_index(types):
 
 def _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
                    detector_params, det_cfg, bw_kbps, queue_delay,
-                   total_bits, costs: PipelineCosts, lr_extent=None):
+                   total_bits, costs: PipelineCosts, lr_extent=None,
+                   roi=None):
     """Traced body shared by ``decode_execute_chunk`` (single stream) and
     ``decode_execute_batched`` (vmap over streams).  Pure jnp: no host
     transfers, no Python loops over frames.
@@ -161,7 +162,14 @@ def _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
     ``enc`` came out of the heterogeneous-ladder padded encode: the
     upscale/MV index maps then read only the valid region of the padded
     canvas, making the result bit-identical to decoding the stream's
-    unpadded encode (the fused round-trip relies on this)."""
+    unpadded encode (the fused round-trip relies on this).
+
+    ``roi`` (a static ``repro.core.roi.RoiConfig``) gates the detector:
+    instead of the full-frame forward, a relevance head over the codec's
+    macroblock statistics picks top-K regions, only their packed patches
+    run the convs, and a scatter with a temporal carry covers gated-off
+    regions (bit-exact vs the ungated path when the gate admits every
+    region — ``tests/test_roi.py``)."""
     H, W = anchor_hd.shape[1:]
 
     lr_up = upscale_nearest(enc.recon, H, W, src_hw=lr_extent)
@@ -177,7 +185,14 @@ def _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
                    types)
 
     # pipelines ① + ② fused into one detector forward over the whole chunk
-    boxes_i, scores_i = _detect(detector_params, det_cfg, qt)
+    # (ROI-gated onto the top-K packed patch batch when cfg carries a roi)
+    if roi is not None:
+        from repro.core.roi import roi_detect
+        boxes_i, scores_i = roi_detect(
+            detector_params, det_cfg, roi, qt, enc.mv, enc.residual_q,
+            enc.recon.shape[1:], lr_extent=lr_extent)
+    else:
+        boxes_i, scores_i = _detect(detector_params, det_cfg, qt)
     boxes, scores = reuse_chunk(types, mvs_hd, boxes_i, scores_i)
 
     f1 = jax.vmap(D.f1_score)(boxes, scores, gt_boxes, gt_valid)
@@ -194,47 +209,51 @@ def _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
             "t_queue": queue_delay, "t_comp": t_comp}
 
 
-@partial(jax.jit, static_argnames=("det_cfg", "costs"))
+@partial(jax.jit, static_argnames=("det_cfg", "costs", "roi"))
 def decode_execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
                          detector_params, det_cfg, *, bw_kbps,
                          queue_delay=0.0, total_bits=0.0,
-                         costs: PipelineCosts = PipelineCosts()):
+                         costs: PipelineCosts = PipelineCosts(),
+                         roi=None):
     """One chunk of one stream as a SINGLE jitted computation.
 
     enc: EncodedChunk (pytree); types: (T,) int; anchor_hd: (T, H, W);
     gt_boxes/gt_valid: (T, N, 4)/(T, N); bw_kbps/queue_delay/total_bits:
-    traced scalars.  Returns a dict of device arrays (boxes, scores, f1,
-    mean_f1, latency, t_trans, t_queue, t_comp).
+    traced scalars; roi: optional static RoiConfig (detector gate).
+    Returns a dict of device arrays (boxes, scores, f1, mean_f1, latency,
+    t_trans, t_queue, t_comp).
     """
     return _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
                           detector_params, det_cfg, bw_kbps, queue_delay,
-                          total_bits, costs)
+                          total_bits, costs, roi=roi)
 
 
 def _execute_batch(enc, types, anchor_hd, gt_boxes, gt_valid,
                    detector_params, det_cfg, bw_kbps, queue_delay,
-                   total_bits, costs: PipelineCosts):
+                   total_bits, costs: PipelineCosts, roi=None):
     """vmap-over-streams traced body: every leading axis is the stream axis
     (S, ...); detector params are shared.  Shared by the single-device jit
     below and the mesh-sharded wrapper in
     ``repro.distributed.stream_sharding.shard_streams`` (which calls it
     inside a ``shard_map`` region with per-shard stream slices)."""
     fn = lambda e, ty, ah, gb, gv, bw, qd, tb: _execute_chunk(
-        e, ty, ah, gb, gv, detector_params, det_cfg, bw, qd, tb, costs)
+        e, ty, ah, gb, gv, detector_params, det_cfg, bw, qd, tb, costs,
+        roi=roi)
     return jax.vmap(fn)(enc, types, anchor_hd, gt_boxes, gt_valid,
                         bw_kbps, queue_delay, total_bits)
 
 
-@partial(jax.jit, static_argnames=("det_cfg", "costs"))
+@partial(jax.jit, static_argnames=("det_cfg", "costs", "roi"))
 def decode_execute_batched(enc, types, anchor_hd, gt_boxes, gt_valid,
                            detector_params, det_cfg, *, bw_kbps,
                            queue_delay, total_bits,
-                           costs: PipelineCosts = PipelineCosts()):
+                           costs: PipelineCosts = PipelineCosts(),
+                           roi=None):
     """vmap-over-streams fused execution — one device dispatch for the
     whole batch of chunks.  Single-device oracle for the sharded path."""
     return _execute_batch(enc, types, anchor_hd, gt_boxes, gt_valid,
                           detector_params, det_cfg, bw_kbps, queue_delay,
-                          total_bits, costs)
+                          total_bits, costs, roi=roi)
 
 
 def decode_and_execute_fused(packet: HybridPacket, detector_params, det_cfg,

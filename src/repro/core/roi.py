@@ -1,0 +1,326 @@
+"""Hierarchical ROI-gated inference inside the fused trace (ISSUE 9).
+
+BiSwift spends detector compute only where it matters: a cheap relevance
+head built from statistics the codec ALREADY computed (macroblock motion
+vectors + quantized residual energy) scores each ``region_px``-sized HD
+region, ``lax.top_k`` packs the top-K active regions into a dense
+fixed-capacity patch batch (static shapes — the detector trace never
+changes with scene content), the detector convs run only on the packed
+patches, and a scatter with a temporal carry covers gated-off regions
+with their last computed raw head output (the pipeline-③ idea applied at
+region granularity, below the frame-level reuse that still runs
+downstream).
+
+Bit-exactness contract (``tests/test_roi.py``): when the gate admits
+every region (``threshold <= 0`` and ``capacity >= n_regions``) the
+assembled raw map equals the full-frame ``detection.forward`` output
+bit-for-bit, so the whole ROI-gated fused round trip reproduces the
+ungated one exactly.  That works because each patch carries a ``halo``
+wide enough to cover the conv stack's receptive field AND the patch
+forward masks activations that fall outside the frame after every layer,
+reproducing full-frame SAME-padding semantics at frame boundaries (zero
+padding of the pre-normalized plane matches conv zero padding; interior
+activations are unaffected by the mask).
+
+Static vs traced: everything in :class:`RoiConfig` is static (it rides
+inside ``RoundtripConfig``/``ServingConfig`` and the jit signatures);
+region scores, the top-K selection and the gather starts are traced, so
+scene content never retraces anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import detection as D
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class RoiConfig:
+    """Static half of the ROI gate.
+
+    ``region_px`` — HD region side (must divide H and W and be a multiple
+    of both 8 and the detector stride); ``halo`` — context margin per
+    patch side (must cover the detector's receptive field and divide by
+    the total downsampling, see ``validate_roi``); ``capacity`` — K, the
+    fixed number of packed patch lanes per frame (the compute budget);
+    ``threshold`` — minimum relevance score for a region to be eligible
+    (``<= 0`` admits every region, leaving top-K as the only gate);
+    ``w_motion``/``w_resid`` — relevance-head feature weights;
+    ``use_kernel`` routes the patch gather through the Pallas kernel
+    (``repro.kernels.roi_gather``, interpret mode on CPU)."""
+    region_px: int = 32
+    halo: int = 8
+    capacity: int = 8
+    threshold: float = 0.0
+    w_motion: float = 1.0
+    w_resid: float = 1.0
+    use_kernel: bool = False
+
+
+def region_grid(hd_hw, roi: RoiConfig) -> tuple[int, int]:
+    """(n_region_rows, n_region_cols) of the HD region grid."""
+    H, W = hd_hw
+    if H % roi.region_px or W % roi.region_px:
+        raise ValueError(
+            f"RoiConfig.region_px={roi.region_px} must divide the HD "
+            f"shape ({H}, {W})")
+    return H // roi.region_px, W // roi.region_px
+
+
+def required_halo(det_cfg) -> int:
+    """Receptive-field radius of the conv stack at input resolution: a
+    3×3 layer adds ±1 at its input's scale, and each downsampling layer
+    doubles the scale of everything after it."""
+    n_down = {2: 1, 4: 2, 8: 3}[det_cfg.stride]
+    rf, grow = 0, 1
+    for i in range(len(det_cfg.channels)):
+        rf += grow
+        if i < n_down:
+            grow *= 2
+    return rf
+
+
+def validate_roi(roi: RoiConfig, det_cfg, hd_hw) -> None:
+    """Static-shape sanity for one (roi, detector, HD shape) binding —
+    raises ValueError at trace time, not deep inside a conv."""
+    region_grid(hd_hw, roi)
+    s = det_cfg.stride
+    if roi.region_px % 8 or roi.region_px % s:
+        raise ValueError(
+            f"region_px={roi.region_px} must be a multiple of 8 and of "
+            f"the detector stride {s}")
+    if roi.halo % s:
+        raise ValueError(
+            f"halo={roi.halo} must be a multiple of the total "
+            f"downsampling {s} (the interior crop happens on the "
+            "stride-s output grid)")
+    rf = required_halo(det_cfg)
+    if roi.halo < rf:
+        raise ValueError(
+            f"halo={roi.halo} is smaller than the detector's receptive "
+            f"field radius {rf}; patch outputs would diverge from the "
+            "full-frame forward")
+    if roi.capacity < 1:
+        raise ValueError(f"capacity={roi.capacity} must be >= 1")
+
+
+# --------------------------------------------------------------------------
+# relevance head: codec statistics -> per-region scores
+# --------------------------------------------------------------------------
+def region_scores(mv, residual_q, lr_hw, hd_hw, roi: RoiConfig,
+                  lr_extent=None):
+    """Cheap traced relevance scores, (T, nry, nrx) f32.
+
+    ``mv``: (T, nby, nbx, 2) LR macroblock motion vectors; ``residual_q``:
+    (T, nblocks, 8, 8) quantized residual coefficients (row-major 8×8
+    blocks over the LR canvas); ``lr_hw``: the (static) LR canvas shape
+    those statistics were computed on; ``lr_extent``: traced valid (h, w)
+    when the encode came from the heterogeneous-ladder padded path (the
+    sample-point index maps then read only the valid region, like
+    ``_upscale_mvs``).
+
+    Each HD region is sampled on an 8-px sub-grid; every sample maps to
+    its nearest LR macroblock (motion magnitude |dy|+|dx|) and nearest LR
+    8×8 residual block (mean |coef|), and the region score is the max
+    over samples of ``w_motion·motion + w_resid·residual``.  Scores only
+    GATE — no bit-exactness contract — so nearest-index sampling is fine.
+    """
+    H, W = hd_hw
+    h, w = lr_hw
+    hv, wv = (h, w) if lr_extent is None else lr_extent
+    hv = jnp.asarray(hv, jnp.int32)
+    wv = jnp.asarray(wv, jnp.int32)
+    nry, nrx = region_grid((H, W), roi)
+    s = roi.region_px // 8                  # samples per region side
+    T = mv.shape[0]
+
+    # HD sample centers -> LR pixel coords (floor map over the valid
+    # extent) -> macroblock / residual-block indices
+    ys = jnp.arange(nry * s, dtype=jnp.int32) * 8 + 4
+    xs = jnp.arange(nrx * s, dtype=jnp.int32) * 8 + 4
+    ylr = jnp.clip(ys * hv // H, 0, hv - 1)
+    xlr = jnp.clip(xs * wv // W, 0, wv - 1)
+    mby = jnp.clip(ylr // 16, 0, jnp.maximum(hv // 16 - 1, 0))
+    mbx = jnp.clip(xlr // 16, 0, jnp.maximum(wv // 16 - 1, 0))
+    rby = jnp.clip(ylr // 8, 0, hv // 8 - 1)
+    rbx = jnp.clip(xlr // 8, 0, wv // 8 - 1)
+
+    motion = jnp.abs(mv.astype(f32)).sum(-1)          # (T, nby, nbx)
+    motion_s = motion[:, mby][:, :, mbx]              # (T, nry*s, nrx*s)
+    energy = jnp.abs(residual_q.astype(f32)).mean((-1, -2))  # (T, nblocks)
+    rid = rby[:, None] * (w // 8) + rbx[None, :]      # (nry*s, nrx*s)
+    energy_s = energy[:, rid]
+    samples = roi.w_motion * motion_s + roi.w_resid * energy_s
+    return samples.reshape(T, nry, s, nrx, s).max(axis=(2, 4))
+
+
+def roi_select(scores, capacity: int, threshold: float):
+    """Top-K active regions, fixed capacity, deterministic tie-break.
+
+    ``scores``: (..., R) flat per-region scores.  Returns
+    ``(idx (..., K) int32, valid (..., K) bool)``: the K highest-scoring
+    regions with score >= threshold, descending score, ties broken by
+    LOWER flat region index (``lax.top_k``'s documented stable order).
+    Lanes beyond the number of admitted regions (threshold cuts, or
+    capacity > R) come back with ``valid=False`` and a safe index 0.
+    """
+    R = scores.shape[-1]
+    keyed = jnp.where(scores >= threshold, scores.astype(f32), -jnp.inf)
+    k = min(capacity, R)
+    top, idx = lax.top_k(keyed, k)
+    valid = jnp.isfinite(top)
+    if k < capacity:
+        pad = capacity - k
+        idx = jnp.concatenate(
+            [idx, jnp.zeros(idx.shape[:-1] + (pad,), idx.dtype)], axis=-1)
+        valid = jnp.concatenate(
+            [valid, jnp.zeros(valid.shape[:-1] + (pad,), bool)], axis=-1)
+    return jnp.where(valid, idx, 0).astype(jnp.int32), valid
+
+
+# --------------------------------------------------------------------------
+# packed patch batch: gather -> masked conv forward -> scatter
+# --------------------------------------------------------------------------
+def extract_patches(frames, ry, rx, roi: RoiConfig):
+    """Normalize, halo-pad and gather: (T, H, W) [0..255] frames + (T, K)
+    region coords -> (T, K, P, P) pre-normalized patches.
+
+    Normalization happens BEFORE padding so the zero margin equals the
+    conv stack's SAME zero padding (raw-pixel zeros would normalize to
+    -0.5 and break boundary exactness)."""
+    xn = frames.astype(f32) / 255.0 - 0.5
+    xp = jnp.pad(xn, ((0, 0), (roi.halo, roi.halo), (roi.halo, roi.halo)))
+    if roi.use_kernel:
+        from repro.kernels.roi_gather.ops import roi_gather
+        return roi_gather(xp, ry, rx, region_px=roi.region_px,
+                          halo=roi.halo)
+    from repro.kernels.roi_gather.ops import roi_gather_ref
+    return roi_gather_ref(xp, ry, rx, region_px=roi.region_px,
+                          halo=roi.halo)
+
+
+def forward_patches(params, det_cfg, patches, ry, rx, hd_hw,
+                    roi: RoiConfig):
+    """Detector forward over the packed patch batch, (T, K, rc, rc, 5).
+
+    All T·K patches run in ONE conv dispatch.  After every conv layer,
+    activations whose global coordinate falls outside the frame are
+    zeroed: an interior activation never reads them (halo >= receptive
+    field), and a boundary activation then sees exactly the zero padding
+    the full-frame SAME conv would have provided — which is what makes
+    the interior crop bit-exact vs ``detection.forward`` for arbitrary
+    params, including nonzero biases.  ``rc = region_px / stride`` output
+    cells per patch side."""
+    H, W = hd_hw
+    T, K, P, _ = patches.shape
+    x = patches.reshape(T * K, P, P)[..., None]
+    ri = ry.reshape(-1)
+    rj = rx.reshape(-1)
+    n_down = {2: 1, 4: 2, 8: 3}[det_cfg.stride]
+    halo_l, reg_l, Hl, Wl = roi.halo, roi.region_px, H, W
+    for i, _c in enumerate(det_cfg.channels):
+        stride = 2 if i < n_down else 1
+        x = lax.conv_general_dilated(
+            x, params[f"conv{i}"], window_strides=(stride, stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"bias{i}"])
+        halo_l //= stride
+        reg_l //= stride
+        Hl //= stride
+        Wl //= stride
+        gy = ri[:, None] * reg_l - halo_l \
+            + jnp.arange(x.shape[1])[None, :]                # (TK, P_l)
+        gx = rj[:, None] * reg_l - halo_l \
+            + jnp.arange(x.shape[2])[None, :]
+        m = ((gy >= 0) & (gy < Hl))[:, :, None] \
+            & ((gx >= 0) & (gx < Wl))[:, None, :]
+        x = jnp.where(m[..., None], x, 0.0)
+    x = lax.conv_general_dilated(
+        x, params["head"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["head_b"]
+    x = x[:, halo_l:halo_l + reg_l, halo_l:halo_l + reg_l, :]
+    return x.reshape(T, K, reg_l, reg_l, x.shape[-1])
+
+
+def roi_raw_maps(params, det_cfg, roi: RoiConfig, frames, idx, valid, *,
+                 carry: bool = True):
+    """Gather + forward + scatter: (T, H, W) frames and a (T, K)
+    selection -> assembled (T, hc, wc, 5) raw head maps.
+
+    ``carry=True`` (the fused chunk path): a ``lax.scan`` over frames
+    keeps the per-region raw outputs as device state, so a region the
+    gate skips at frame t retains its most recent computed raw — region-
+    granular pipeline-③ reuse.  Regions never selected in the chunk stay
+    at raw 0 (objectness sigmoid(0) = 0.5, below the strict > 0.5
+    confidence cut).  ``carry=False`` (the serving batch path, where rows
+    from different streams interleave): every row scatters into a fresh
+    zero map.  Invalid lanes scatter out of bounds and are dropped."""
+    T, H, W = frames.shape
+    validate_roi(roi, det_cfg, (H, W))
+    nry, nrx = region_grid((H, W), roi)
+    R = nry * nrx
+    stride = det_cfg.stride
+    rc = roi.region_px // stride
+    hc, wc = H // stride, W // stride
+    ry = (idx // nrx).astype(jnp.int32)
+    rx = (idx % nrx).astype(jnp.int32)
+    patches = extract_patches(frames, ry, rx, roi)
+    raws = forward_patches(params, det_cfg, patches, ry, rx, (H, W), roi)
+
+    def scatter(regions, raws_t, idx_t, valid_t):
+        safe = jnp.where(valid_t, idx_t, R)      # R is out of bounds
+        return regions.at[safe].set(raws_t, mode="drop")
+
+    def assemble(regions):
+        return regions.reshape(nry, nrx, rc, rc, 5) \
+            .transpose(0, 2, 1, 3, 4).reshape(hc, wc, 5)
+
+    init = jnp.zeros((R, rc, rc, 5), raws.dtype)
+    if carry:
+        def step(regions, xs):
+            regions = scatter(regions, *xs)
+            return regions, assemble(regions)
+
+        _, maps = lax.scan(step, init, (raws, idx, valid))
+    else:
+        maps = jax.vmap(
+            lambda r, i, v: assemble(scatter(init, r, i, v)))(
+            raws, idx, valid)
+    return maps
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+def roi_detect(params, det_cfg, roi: RoiConfig, frames, mv, residual_q,
+               lr_hw, lr_extent=None):
+    """ROI-gated replacement for the full-frame ``_detect``: score, pack,
+    forward, scatter-with-carry, decode.  Same (boxes, scores) shapes as
+    ``detection.decode_boxes`` on the full frame."""
+    T, H, W = frames.shape
+    nry, nrx = region_grid((H, W), roi)
+    scores = region_scores(mv, residual_q, lr_hw, (H, W), roi,
+                           lr_extent=lr_extent)
+    idx, valid = roi_select(scores.reshape(T, nry * nrx), roi.capacity,
+                            roi.threshold)
+    maps = roi_raw_maps(params, det_cfg, roi, frames, idx, valid,
+                        carry=True)
+    return D.decode_boxes(maps, det_cfg)
+
+
+def roi_infer(params, det_cfg, roi: RoiConfig, frames, scores):
+    """Serving-plane batched path: gate each padded-batch row by its
+    pre-staged region scores (``runtime._stage_chunk``), no temporal
+    carry (rows from different streams interleave; the frame-level
+    pipeline-③ carry still runs in ``_finish_chunk``).  Bit-exact vs the
+    full-frame detector when the gate admits every region."""
+    idx, valid = roi_select(scores, roi.capacity, roi.threshold)
+    maps = roi_raw_maps(params, det_cfg, roi, frames, idx, valid,
+                        carry=False)
+    return D.decode_boxes(maps, det_cfg)

@@ -64,13 +64,16 @@ class RoundtripConfig:
     ``level`` is the bitrate-ladder rung (§VI-A): it decides the LR shape
     and the codec quality, so it must be static.  ``codec.quality`` is
     overridden by the rung's quality — set ``use_kernel``/``dtype`` there
-    to pick the search variant."""
+    to pick the search variant.  ``roi`` (a ``repro.core.roi.RoiConfig``)
+    turns on ROI-gated inference inside the fused trace: the detector
+    runs only on the top-K packed region patches."""
     level: int = 2
     codec: VideoCodecConfig = VideoCodecConfig()
     anchor_quality: float = 70.0
     det_cfg: TinyDetectorConfig = TinyDetectorConfig()
     costs: PipelineCosts = PipelineCosts()
     fps: float = 30.0
+    roi: object | None = None
 
     def codec_for(self, level: int | None = None) -> VideoCodecConfig:
         ql = QUALITY_LADDER[self.level if level is None else level]
@@ -102,7 +105,8 @@ def _roundtrip_execute(raw, enc, lr_extent, gt_boxes, gt_valid,
 
     out = _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
                          detector_params, cfg.det_cfg, bw_kbps, queue_delay,
-                         total_bits, cfg.costs, lr_extent=lr_extent)
+                         total_bits, cfg.costs, lr_extent=lr_extent,
+                         roi=cfg.roi)
     out.update(types=types, video_bits=video_bits, anchor_bits=anchor_bits,
                total_bits=total_bits)
     return out
@@ -289,7 +293,7 @@ def roundtrip_oracle(raw, gt_boxes, gt_valid, detector_params, *, tr1, tr2,
     out = decode_execute_chunk(                                # jit #2
         enc, types, anchor_hd, gt_boxes, gt_valid, detector_params,
         cfg.det_cfg, bw_kbps=bw_kbps, queue_delay=queue_delay,
-        total_bits=total_bits, costs=cfg.costs)
+        total_bits=total_bits, costs=cfg.costs, roi=cfg.roi)
     out = dict(out)
     out.update(types=types, video_bits=video_bits, anchor_bits=anchor_bits,
                total_bits=total_bits)

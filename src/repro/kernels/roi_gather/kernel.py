@@ -1,0 +1,60 @@
+"""ROI patch-gather kernel (Pallas): pack top-K active regions densely.
+
+One grid step per (frame, capacity-lane): the whole halo-padded frame is
+staged via a constant index map (it is re-read K times per frame, so on
+TPU it stays VMEM-resident across the K lanes of a frame), the lane's
+region offset comes in as a (1, 1) scalar block, and the output block is
+the lane's dense (P, P) patch, P = region_px + 2·halo.  The gather start
+is dynamic (``pl.dslice`` from the offset refs) but every SHAPE is
+static — the packed batch always has capacity-K lanes, so the detector
+trace downstream never changes with scene content.
+
+Invalid lanes (gate admitted fewer than K regions) still gather a patch
+(the caller points them at region 0); their outputs are dropped at
+scatter time.  A gather is exact regardless of dtype, so the kernel is
+bit-exact vs the pure-jnp ``dynamic_slice`` fallback — the parity
+contract ``tests/test_roi.py`` holds, mirroring ``motion_sad``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(ry_ref, rx_ref, x_ref, o_ref, *, region_px: int,
+                   halo: int):
+    P = region_px + 2 * halo
+    # region (ry, rx) -> top-left corner in the halo-padded plane: the
+    # padding shifts frame coords by +halo, so the patch spanning
+    # [ry*R - halo, ry*R + R + halo) starts at padded row ry*R
+    y0 = ry_ref[0, 0] * region_px
+    x0 = rx_ref[0, 0] * region_px
+    patch = pl.load(x_ref, (pl.dslice(0, 1), pl.dslice(y0, P),
+                            pl.dslice(x0, P)))
+    o_ref[0, 0] = patch[0]
+
+
+def roi_gather_patches(planes, ry, rx, *, region_px: int, halo: int,
+                       interpret: bool = True):
+    """planes: (T, Hp, Wp) halo-padded planes; ry/rx: (T, K) int32 region
+    indices -> (T, K, P, P) packed patches."""
+    T, Hp, Wp = planes.shape
+    K = ry.shape[1]
+    P = region_px + 2 * halo
+    kernel = functools.partial(_gather_kernel, region_px=region_px,
+                               halo=halo)
+    return pl.pallas_call(
+        kernel,
+        grid=(T, K),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda t, k: (t, k)),
+            pl.BlockSpec((1, 1), lambda t, k: (t, k)),
+            pl.BlockSpec((1, Hp, Wp), lambda t, k: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, P, P), lambda t, k: (t, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, K, P, P), planes.dtype),
+        interpret=interpret,
+    )(ry.astype(jnp.int32), rx.astype(jnp.int32), planes)

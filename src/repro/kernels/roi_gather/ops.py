@@ -1,0 +1,45 @@
+"""Jit'd wrappers for the ROI patch gather: Pallas kernel + jnp oracle."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.roi_gather.kernel import roi_gather_patches
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("region_px", "halo"))
+def roi_gather_ref(planes, ry, rx, *, region_px: int, halo: int):
+    """Pure-jnp fallback oracle: per-lane ``dynamic_slice`` gather.
+
+    planes: (T, Hp, Wp) halo-padded planes; ry/rx: (T, K) region indices.
+    Returns (T, K, P, P), P = region_px + 2·halo — the parity baseline
+    for the Pallas kernel (a gather is exact, so the contract is
+    bit-exactness, like ``motion_sad`` vs ``block_sad_scan``).
+    """
+    P = region_px + 2 * halo
+
+    def one(plane, y, x):
+        return lax.dynamic_slice(plane, (y * region_px, x * region_px),
+                                 (P, P))
+
+    return jax.vmap(lambda pl_, ys, xs: jax.vmap(
+        lambda y, x: one(pl_, y, x))(ys, xs))(planes, ry, rx)
+
+
+@partial(jax.jit, static_argnames=("region_px", "halo", "interpret"))
+def roi_gather(planes, ry, rx, *, region_px: int, halo: int,
+               interpret: bool | None = None):
+    """Pallas ROI gather (interpret mode on CPU): (T, Hp, Wp) + (T, K)
+    region indices -> (T, K, P, P) packed patch batch, bit-exact vs
+    ``roi_gather_ref``."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return roi_gather_patches(planes, ry, rx, region_px=region_px,
+                              halo=halo, interpret=interpret)

@@ -80,16 +80,27 @@ f32 = np.float32
 # ---------------------------------------------------------------------------
 # module-level jits — one trace per batch signature, shared by every runtime
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("hd_hw",))
-def _stage_chunk(types, anchor_hd, recon, mv, *, hd_hw):
+@partial(jax.jit, static_argnames=("hd_hw", "roi"))
+def _stage_chunk(types, anchor_hd, recon, mv, residual_q, *, hd_hw,
+                 roi=None):
     """Stage one chunk on device: upscale the LR video to analytics
     resolution, select each frame's execution plane (decoded HD anchor for
     type-1, upscaled LR for the rest), and upscale the motion vectors —
-    one async dispatch, nothing touches the host."""
+    one async dispatch, nothing touches the host.  With ``roi`` set (a
+    static ``repro.core.roi.RoiConfig``) the relevance head also scores
+    each HD region from the codec's macroblock statistics; the (T, R)
+    flat scores ride the ticket so the detector dispatch can gate its
+    rows without re-deriving anything."""
     H, W = hd_hw
     lr_up = upscale_nearest(recon, H, W)
     frames = jnp.where((types == 1)[:, None, None], anchor_hd, lr_up)
-    return frames, _upscale_mvs(mv, (H, W))
+    mvs = _upscale_mvs(mv, (H, W))
+    if roi is None:
+        return frames, mvs, None
+    from repro.core.roi import region_grid, region_scores
+    nry, nrx = region_grid(hd_hw, roi)
+    scores = region_scores(mv, residual_q, recon.shape[1:], hd_hw, roi)
+    return frames, mvs, scores.reshape(types.shape[0], nry * nrx)
 
 
 @jax.jit
@@ -105,6 +116,18 @@ def _gather_batch(frames_seq, flat_idx, valid):
     flat = stacked.reshape((-1,) + stacked.shape[2:])
     batch = jnp.take(flat, jnp.clip(flat_idx, 0, flat.shape[0] - 1), axis=0)
     return jnp.where(valid[:, None, None], batch, 0.0)
+
+
+@jax.jit
+def _gather_rows(rows_seq, flat_idx, valid):
+    """ROI-mode companion to ``_gather_batch``: pack per-ticket staged
+    (T, R) region-score rows into the batch order.  Padding rows score 0
+    everywhere — their gated patches run on the zero frames
+    ``_gather_batch`` produced and are dropped at scatter time."""
+    stacked = jnp.stack(rows_seq)
+    flat = stacked.reshape((-1,) + stacked.shape[2:])
+    rows = jnp.take(flat, jnp.clip(flat_idx, 0, flat.shape[0] - 1), axis=0)
+    return jnp.where(valid[:, None], rows, 0.0)
 
 
 @partial(jax.jit, static_argnames=("has_init",))
@@ -162,6 +185,7 @@ class ChunkTicket:
     reqs: list = dataclasses.field(default_factory=list)
     frames_dev: jax.Array | None = None
     mvs_dev: jax.Array | None = None
+    rscores_dev: jax.Array | None = None   # (T, R) ROI scores (roi mode)
     init_b: jax.Array | None = None
     init_s: jax.Array | None = None
     n_cells: int = 0
@@ -269,8 +293,17 @@ class EdgeRuntime:
 
         # params enter the jit as an ARGUMENT (closure capture would embed
         # them as constants and the computation would ignore their device)
-        infer_jit = jax.jit(lambda p, frames: D.decode_boxes(
-            D.forward(p, det_cfg, frames), det_cfg))
+        # In ROI mode the dispatch payload is (frames, region_scores) and
+        # each row runs only its top-K gated region patches.
+        roi = getattr(cfg, "roi", None)
+        if roi is None:
+            infer_jit = jax.jit(lambda p, frames: D.decode_boxes(
+                D.forward(p, det_cfg, frames), det_cfg))
+        else:
+            from repro.core.roi import roi_infer
+            infer_jit = jax.jit(lambda p, payload: roi_infer(
+                p, det_cfg, roi, payload[0], payload[1]))
+        self.roi = roi
 
         def make_infer(params, dev=None):
             # staged batches are COMMITTED (jit outputs); an explicit
@@ -357,7 +390,9 @@ class EdgeRuntime:
         across active shards when the primary would blow the
         latency-quantile deadline."""
         if shard is not None and self.faults is not None:
-            base = frames.shape[0] / max(self.cfg.shard_capacity_fps, 1e-6)
+            n_rows = frames[0].shape[0] if isinstance(frames, tuple) \
+                else frames.shape[0]
+            base = n_rows / max(self.cfg.shard_capacity_fps, 1e-6)
             slow = self.faults.shard_slowdown(shard, self._t)
             self.straggler.record(shard, base * slow)
             if self._hedge is not None and len(self.active_shards) > 1 \
@@ -378,6 +413,11 @@ class EdgeRuntime:
     def _infer_batch(self, frames, shard=None):
         """Legacy host-facing executor (``PipelineQueues.drain_fused``):
         the device dispatch plus an immediate transfer per row."""
+        if self.roi is not None:
+            raise RuntimeError(
+                "the legacy frame-payload drain cannot run in ROI mode — "
+                "region scores are staged per ticket; use "
+                "submit_chunk/flush/poll (process_chunk)")
         boxes, scores = self._infer_batch_dev(jnp.asarray(frames), shard)
         return list(zip(np.asarray(boxes), np.asarray(scores)))
 
@@ -565,13 +605,15 @@ class EdgeRuntime:
 
         # one async dispatch stages the whole chunk on device; values stay
         # there until the poll boundary
-        frames_dev, mvs_dev = _stage_chunk(
+        frames_dev, mvs_dev, rscores_dev = _stage_chunk(
             jnp.asarray(types), jnp.asarray(packet.anchor_hd),
-            jnp.asarray(enc.recon), jnp.asarray(enc.mv), hd_hw=(H, W))
+            jnp.asarray(enc.recon), jnp.asarray(enc.mv),
+            jnp.asarray(enc.residual_q), hd_hw=(H, W), roi=self.roi)
 
         n_cells = (H // self.det_cfg.stride) * (W // self.det_cfg.stride)
         tk = ChunkTicket(stream, t, shard, types, (H, W),
                          frames_dev=frames_dev, mvs_dev=mvs_dev,
+                         rscores_dev=rscores_dev,
                          init_b=None if prev is None else prev.last_boxes,
                          init_s=None if prev is None else prev.last_scores,
                          n_cells=n_cells)
@@ -619,6 +661,11 @@ class EdgeRuntime:
                 + (tickets[0].frames_dev,) * (k_pad - len(tickets))
             batch = _gather_batch(planes, jnp.asarray(flat_idx),
                                   jnp.asarray(valid))
+            if self.roi is not None:
+                rows = tuple(tk.rscores_dev for tk in tickets) \
+                    + (tickets[0].rscores_dev,) * (k_pad - len(tickets))
+                batch = (batch, _gather_rows(rows, jnp.asarray(flat_idx),
+                                             jnp.asarray(valid)))
             q = self._inflight[shard]
             while len(q) >= self.max_inflight:
                 jax.block_until_ready(q.popleft())
@@ -652,6 +699,7 @@ class EdgeRuntime:
             tk._dev_out = (boxes, scores)
             tk.done = True
             tk.frames_dev = tk.mvs_dev = tk.init_b = tk.init_s = None
+            tk.rscores_dev = None
             if self._open.get(tk.stream) is tk:
                 del self._open[tk.stream]
 

@@ -41,6 +41,10 @@ class ServingConfig:
     # (EdgeRuntime.flush) — 2 overlaps host scheduling of the next batch
     # with the device computing the current one
     max_inflight: int = 2
+    # optional repro.core.roi.RoiConfig: the detector dispatch gates each
+    # batch row onto its top-K active regions (scored at stage time from
+    # the codec's macroblock statistics).  None = full-frame inference.
+    roi: object | None = None
 
     @property
     def shard_capacity_fps(self) -> float:

@@ -51,6 +51,9 @@ class EnvConfig:
     # round-trip jit (static — the legacy host encoder searched it per
     # chunk, which is a data-dependent decision the single trace avoids)
     anchor_quality: float = 70.0
+    # optional repro.core.roi.RoiConfig: gates the fused detector onto the
+    # top-K active regions scored from the codec's macroblock statistics
+    roi: object | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -379,7 +382,7 @@ class MultiStreamEnv:
             _, det_cfg = self.detector
             self._rt_cfg = RoundtripConfig(
                 det_cfg=det_cfg, anchor_quality=self.cfg.anchor_quality,
-                fps=self.cfg.fps)
+                fps=self.cfg.fps, roi=self.cfg.roi)
         return self._rt_cfg
 
     def _run_streams_roundtrip(self, alloc, thresholds,

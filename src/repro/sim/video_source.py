@@ -66,6 +66,45 @@ def paper_stream_mix(n_streams: int, height: int = 96, width: int = 160):
     return mix
 
 
+# Scenario presets for the ROI-gating benchmarks (fig. 14 style): named
+# content regimes with very different active-region densities, so the
+# relevance gate's win (sparse) and its saturation point (dense) are both
+# exercised by the same harness.
+def scenario_streams(scenario: str, n_streams: int = 1, height: int = 96,
+                     width: int = 160) -> list[StreamConfig]:
+    """Named content scenarios -> per-stream configs.
+
+    ``sparse-highway``: a couple of large fast objects on a bright, mostly
+    static background — most regions are idle, the ROI gate's best case.
+    ``crowded-crossroad``: many small slow objects spread over the frame —
+    activity everywhere, the gate's stress case.  ``day-night-mix``:
+    alternating bright/low-light streams (contrast drops at night, so the
+    residual term of the relevance head carries more of the signal).
+    """
+    if scenario == "sparse-highway":
+        return [StreamConfig(name=f"highway_{i}", height=height,
+                             width=width, n_objects=2, min_size=18,
+                             max_size=30, speed=4.0, texture_contrast=80.0,
+                             background_level=150.0, seed=300 + i)
+                for i in range(n_streams)]
+    if scenario == "crowded-crossroad":
+        return [StreamConfig(name=f"crossroad_{i}", height=height,
+                             width=width, n_objects=14, min_size=8,
+                             max_size=14, speed=1.5, texture_contrast=70.0,
+                             background_level=110.0, seed=400 + i)
+                for i in range(n_streams)]
+    if scenario == "day-night-mix":
+        return [StreamConfig(
+            name=f"{'day' if i % 2 == 0 else 'night'}_{i}", height=height,
+            width=width, n_objects=6, min_size=10, max_size=20, speed=2.0,
+            texture_contrast=90.0 if i % 2 == 0 else 40.0,
+            background_level=120.0 if i % 2 == 0 else 35.0, seed=500 + i)
+            for i in range(n_streams)]
+    raise ValueError(
+        f"unknown scenario {scenario!r} (expected 'sparse-highway', "
+        "'crowded-crossroad' or 'day-night-mix')")
+
+
 def _background(key, cfg: StreamConfig):
     H, W = cfg.height, cfg.width
     yy = jnp.linspace(0, 1, H)[:, None]

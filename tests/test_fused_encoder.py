@@ -234,8 +234,11 @@ def test_motion_sad_diamond_kernel_matches_fallback_property(nby, nbx,
                              + jax.random.normal(k2, (H, W)) * 2, 0, 255))
     dt = jnp.bfloat16 if bf16 else None
     mv_f, sad_f = block_sad(cur, ref, radius, search="diamond", dtype=dt)
-    mv_k, sad_k = block_sad(cur, ref, radius, search="diamond", dtype=dt,
-                            use_kernel=True)
+    # call the kernel entry directly: block_sad's static dispatch routes
+    # small/interpret-mode canvases to the traced descent, which would
+    # make this parity check compare the fallback with itself
+    mv_k, sad_k = motion_sad(cur, ref, radius=radius, dtype=dt,
+                             search="diamond")
     np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_f))
     np.testing.assert_array_equal(np.asarray(sad_k), np.asarray(sad_f))
 

@@ -1,0 +1,267 @@
+"""ROI-gated inference (ISSUE 9): selection determinism, gather-kernel
+parity, the admit-all bit-exactness contract against the full-frame
+detector (standalone, fused round trip, and the serving plane), and the
+temporal-carry semantics of the region scatter."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.roi import (RoiConfig, region_grid, region_scores,
+                            required_halo, roi_raw_maps, roi_select,
+                            validate_roi)
+from repro.kernels.roi_gather.ops import roi_gather, roi_gather_ref
+from repro.models import detection as D
+
+KEY = jax.random.PRNGKey(0)
+DET = D.TinyDetectorConfig()
+
+
+def _params(seed=1):
+    return D.init(jax.random.PRNGKey(seed), DET)
+
+
+def _frames(T=3, H=64, W=96, seed=2):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (T, H, W),
+                              jnp.float32) * 255
+
+
+# ----------------------------------------------------------- roi_select
+def test_roi_select_threshold_and_tiebreak():
+    """Ties break toward the LOWER flat region index (lax.top_k stable
+    order); sub-threshold regions never occupy a lane."""
+    scores = jnp.asarray([[5.0, 1.0, 5.0, 0.0, 5.0, 5.0]])
+    idx, valid = roi_select(scores, capacity=3, threshold=2.0)
+    np.testing.assert_array_equal(np.asarray(idx), [[0, 2, 4]])
+    assert np.asarray(valid).all()
+
+
+def test_roi_select_zero_admitted_regions():
+    """A threshold above every score leaves all lanes invalid with the
+    safe index 0 — downstream the scatter drops them all."""
+    scores = jnp.asarray([[0.3, 0.1, 0.2, 0.0]])
+    idx, valid = roi_select(scores, capacity=2, threshold=10.0)
+    assert not np.asarray(valid).any()
+    np.testing.assert_array_equal(np.asarray(idx), 0)
+
+
+def test_roi_select_capacity_exceeds_regions():
+    """capacity > R pads with invalid lanes rather than repeating
+    regions."""
+    scores = jnp.asarray([[2.0, 3.0, 1.0]])
+    idx, valid = roi_select(scores, capacity=5, threshold=-1.0)
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  [[True, True, True, False, False]])
+    np.testing.assert_array_equal(np.asarray(idx)[0, :3], [1, 0, 2])
+
+
+# ------------------------------------------------------- static validation
+def test_required_halo_default_detector():
+    # 3 layers, all downsampling at stride 8: rf = 1 + 2 + 4
+    assert required_halo(DET) == 7
+
+
+@pytest.mark.parametrize("roi,hd_hw", [
+    (RoiConfig(region_px=24), (64, 96)),          # 24 does not divide 64
+    (RoiConfig(region_px=32), (64, 100)),         # W not divisible
+    (RoiConfig(halo=0), (64, 96)),                # halo < rf (7)
+    (RoiConfig(halo=12), (64, 96)),               # halo % stride != 0
+    (RoiConfig(capacity=0), (64, 96)),            # capacity < 1
+])
+def test_validate_roi_rejects_bad_bindings(roi, hd_hw):
+    with pytest.raises(ValueError):
+        validate_roi(roi, DET, hd_hw)
+
+
+def test_validate_roi_accepts_default_binding():
+    validate_roi(RoiConfig(), DET, (64, 96))
+    assert region_grid((64, 96), RoiConfig()) == (2, 3)
+
+
+# ------------------------------------------------------- gather kernel
+@pytest.mark.parametrize("T,K,region_px,halo", [
+    (2, 3, 32, 8), (1, 6, 32, 8), (3, 2, 16, 8)])
+def test_roi_gather_kernel_matches_ref(T, K, region_px, halo):
+    H, W = 64, 96
+    nry, nrx = H // region_px, W // region_px
+    ks = jax.random.split(KEY, 3)
+    planes = jax.random.uniform(
+        ks[0], (T, H + 2 * halo, W + 2 * halo), jnp.float32)
+    ry = jax.random.randint(ks[1], (T, K), 0, nry)
+    rx = jax.random.randint(ks[2], (T, K), 0, nrx)
+    ref = roi_gather_ref(planes, ry, rx, region_px=region_px, halo=halo)
+    ker = roi_gather(planes, ry, rx, region_px=region_px, halo=halo,
+                     interpret=True)
+    np.testing.assert_array_equal(np.asarray(ker), np.asarray(ref))
+
+
+# ------------------------------------------- admit-all bit-exactness
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_admit_all_raw_maps_bitexact_vs_fullframe(use_kernel):
+    """The core contract: every region selected -> assembled raw maps
+    equal detection.forward bit-for-bit (boundary masking + pre-pad
+    normalization make the patch forward exact, nonzero biases and
+    all)."""
+    frames = _frames()
+    params = _params()
+    roi = RoiConfig(capacity=6, threshold=-1.0, use_kernel=use_kernel)
+    T = frames.shape[0]
+    idx = jnp.tile(jnp.arange(6, dtype=jnp.int32)[None], (T, 1))
+    valid = jnp.ones((T, 6), bool)
+    maps = roi_raw_maps(params, DET, roi, frames, idx, valid, carry=True)
+    full = D.forward(params, DET, frames)
+    np.testing.assert_array_equal(np.asarray(maps), np.asarray(full))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_roundtrip_admit_all_bitexact_vs_ungated(use_kernel):
+    """Fused round trip with an admit-all gate reproduces the ungated
+    round trip exactly (boxes, scores, f1)."""
+    from repro.core.roundtrip import RoundtripConfig, roundtrip_chunk
+    from repro.sim.video_source import StreamConfig, generate_chunk
+
+    frames, gt_b, gt_v = generate_chunk(
+        KEY, StreamConfig(height=64, width=96, n_objects=3), 0, 3)
+    params = _params()
+    cfg0 = RoundtripConfig(level=3)
+    roi = RoiConfig(capacity=6, threshold=-1.0, use_kernel=use_kernel)
+    kw = dict(tr1=0.1, tr2=0.3, bw_kbps=2000.0, cfg=cfg0)
+    o0 = roundtrip_chunk(frames, gt_b, gt_v, params, **kw)
+    kw["cfg"] = dataclasses.replace(cfg0, roi=roi)
+    o1 = roundtrip_chunk(frames, gt_b, gt_v, params, **kw)
+    for k in ("boxes", "scores", "f1"):
+        np.testing.assert_array_equal(np.asarray(o0[k]),
+                                      np.asarray(o1[k]), err_msg=k)
+
+
+def test_roundtrip_batched_admit_all_bitexact():
+    from repro.core.roundtrip import RoundtripConfig, roundtrip_batched
+    from repro.sim.video_source import StreamConfig, generate_chunk
+
+    ks = jax.random.split(KEY, 2)
+    chunks = [generate_chunk(k, StreamConfig(height=64, width=96,
+                                             n_objects=2, seed=10 + i),
+                             0, 3)
+              for i, k in enumerate(ks)]
+    raw = jnp.stack([c[0] for c in chunks])
+    gt_b = jnp.stack([c[1] for c in chunks])
+    gt_v = jnp.stack([c[2] for c in chunks])
+    params = _params()
+    S = raw.shape[0]
+    sc = jnp.full((S,), 0.1), jnp.full((S,), 0.3), jnp.full((S,), 2000.0)
+    cfg0 = RoundtripConfig(level=3)
+    roi = RoiConfig(capacity=6, threshold=-1.0)
+    o0 = roundtrip_batched(raw, gt_b, gt_v, params, tr1=sc[0], tr2=sc[1],
+                           bw_kbps=sc[2], queue_delay=jnp.zeros(S),
+                           cfg=cfg0)
+    o1 = roundtrip_batched(raw, gt_b, gt_v, params, tr1=sc[0], tr2=sc[1],
+                           bw_kbps=sc[2], queue_delay=jnp.zeros(S),
+                           cfg=dataclasses.replace(cfg0, roi=roi))
+    for k in ("boxes", "scores", "f1"):
+        np.testing.assert_array_equal(np.asarray(o0[k]),
+                                      np.asarray(o1[k]), err_msg=k)
+
+
+# ----------------------------------------------------- carry semantics
+def test_carry_holds_last_computed_region():
+    """carry=True: a region the gate skips at frame t keeps its frame
+    t-1 raw output (region-granular pipeline-③ reuse); carry=False
+    scatters into fresh zeros every row."""
+    frames = _frames(T=2)
+    params = _params()
+    roi = RoiConfig(capacity=1, threshold=-1.0)
+    idx = jnp.asarray([[0], [0]], jnp.int32)
+    valid = jnp.asarray([[True], [False]])
+    maps_c = roi_raw_maps(params, DET, roi, frames, idx, valid,
+                          carry=True)
+    maps_f = roi_raw_maps(params, DET, roi, frames, idx, valid,
+                          carry=False)
+    rc = roi.region_px // DET.stride
+    # frame 1 (gate skipped region 0): carry retains frame 0's raw there
+    np.testing.assert_array_equal(np.asarray(maps_c[1, :rc, :rc]),
+                                  np.asarray(maps_c[0, :rc, :rc]))
+    assert np.abs(np.asarray(maps_c[0, :rc, :rc])).max() > 0
+    # carry=False: frame 1 saw no scatter at all -> raw 0 everywhere
+    np.testing.assert_array_equal(np.asarray(maps_f[1]), 0.0)
+
+
+def test_never_selected_regions_stay_below_confidence_cut():
+    """Raw 0 decodes to objectness sigmoid(0) = 0.5 — exactly at, not
+    above, the strict > 0.5 confidence cut, so gated-off regions never
+    emit detections."""
+    frames = _frames(T=2)
+    params = _params()
+    roi = RoiConfig(capacity=2, threshold=-1.0)
+    idx = jnp.zeros((2, 2), jnp.int32)
+    valid = jnp.zeros((2, 2), bool)
+    maps = roi_raw_maps(params, DET, roi, frames, idx, valid, carry=True)
+    np.testing.assert_array_equal(np.asarray(maps), 0.0)
+    _, scores = D.decode_boxes(maps, DET)
+    np.testing.assert_array_equal(np.asarray(scores), 0.5)
+    assert not np.any(np.asarray(scores) > 0.5)
+
+
+# ------------------------------------------------------ relevance head
+def test_region_scores_localize_motion():
+    """A single moving macroblock lights up exactly the regions whose
+    8-px sample sub-grid maps onto it."""
+    T, H, W = 1, 64, 96
+    lr_hw = (32, 48)                              # level with scale 2
+    mv = jnp.zeros((T, 2, 3, 2), jnp.int32)       # 16-px macroblocks
+    mv = mv.at[0, 0, 0].set(jnp.asarray([4, 3]))  # top-left block moves
+    nblk = (32 // 8) * (48 // 8)
+    resid = jnp.zeros((T, nblk, 8, 8), jnp.float32)
+    roi = RoiConfig(region_px=32)
+    s = region_scores(mv, resid, lr_hw, (H, W), roi)
+    assert s.shape == (T, 2, 3)
+    s = np.asarray(s)
+    assert s[0, 0, 0] == pytest.approx(7.0)       # |4| + |3|
+    assert (s[0].ravel()[1:] == 0).all() or s[0, 0, 0] == s.max()
+    assert np.count_nonzero(s) < s.size           # gate separates regions
+
+
+# ------------------------------------------------------- serving plane
+def test_serving_roi_admit_all_matches_ungated():
+    """EdgeRuntime in ROI mode with an admit-all gate returns the same
+    boxes/scores/types as the full-frame runtime across two consecutive
+    chunks (the frame-level pipeline-③ carry still runs downstream)."""
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    from repro.sim.video_source import StreamConfig, generate_chunk
+
+    params = _params()
+    scfg = StreamConfig(height=64, width=96, n_objects=3)
+    roi = RoiConfig(capacity=6, threshold=-1.0)
+    rt0 = EdgeRuntime(ServingConfig(n_streams=1), params, DET)
+    rt1 = EdgeRuntime(ServingConfig(n_streams=1, roi=roi), params, DET)
+    for t in range(2):
+        frames, _, _ = generate_chunk(KEY, scfg, t, 4)
+        packet = encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+        b0, s0, ty0 = rt0.process_chunk(0, t, packet)
+        b1, s1, ty1 = rt1.process_chunk(0, t, packet)
+        np.testing.assert_array_equal(np.asarray(ty0), np.asarray(ty1))
+        np.testing.assert_array_equal(np.asarray(b0), np.asarray(b1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_serving_roi_gated_runs_with_static_capacity():
+    """A real (non-admit-all) gate keeps shapes static and produces
+    finite outputs."""
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    from repro.sim.video_source import StreamConfig, generate_chunk
+
+    params = _params()
+    frames, _, _ = generate_chunk(
+        KEY, StreamConfig(height=64, width=96, n_objects=2), 0, 4)
+    packet = encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+    roi = RoiConfig(capacity=2, threshold=0.0)
+    rt = EdgeRuntime(ServingConfig(n_streams=1, roi=roi), params, DET)
+    b, s, types = rt.process_chunk(0, 0, packet)
+    assert b.shape[0] == 4 and s.shape[0] == 4
+    assert not np.any(np.isnan(np.asarray(b)))
+    assert not np.any(np.isnan(np.asarray(s)))
