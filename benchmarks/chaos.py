@@ -27,16 +27,21 @@ SMOKE = os.environ.get("BISWIFT_BENCH_SMOKE") == "1"
 
 
 def _preset_report(name: str, n_chunks: int, seed: int,
-                   check_batch_equivalence: bool = False) -> dict:
+                   check_batch_equivalence: bool = False,
+                   forecast: bool = False) -> dict:
     from repro.serving.faults import SoakConfig, preset_schedule, run_soak
     n_shards = 2 if name == "shard-chaos" else 1
     cfg = SoakConfig(n_chunks=n_chunks, n_streams=3, chunk_frames=3,
                      n_shards=n_shards, seed=seed)
     sched = preset_schedule(name, n_chunks=n_chunks, n_streams=3,
                             n_shards=n_shards, seed=seed)
+    fc = None
+    if forecast:
+        from repro.core.forecast import ForecastConfig
+        fc = ForecastConfig()
     # the continuous-batching path is the serving mode under test; one
     # preset re-runs chunk-sequentially to prove control-equivalence
-    rep = run_soak(cfg, sched, batch_submit=True)
+    rep = run_soak(cfg, sched, batch_submit=True, forecast=fc)
     if check_batch_equivalence:
         sync = run_soak(cfg, sched, batch_submit=False)
         if rep["stream_stats"] != sync["stream_stats"] or \
@@ -51,7 +56,9 @@ def _preset_report(name: str, n_chunks: int, seed: int,
                         "frames_skipped", "chunks_lost", "chunks_corrupt",
                         "chunks_stalled")}
     return {
-        "preset": name,
+        "preset": name + ("-forecast" if forecast else ""),
+        "forecast": forecast,
+        "forecast_holds": int(rep["forecast_holds"]),
         "batch_submit": True,
         "n_chunks": n_chunks,
         "n_shards": n_shards,
@@ -98,6 +105,35 @@ def main() -> None:
             errors.append(f"{name}: {rep['queue_leaks']} queue leaks")
         if not rep["recovery_ok"]:
             errors.append(f"{name}: fps did not recover within K chunks")
+    # bench-adaptive: predictive admission vs the reactive ladder under
+    # bandwidth collapse — the forecast gate must strictly lower deadline
+    # misses (both runs share the seeded schedule, so this is a
+    # deterministic comparison, not a flaky race)
+    try:
+        fc_rep = _preset_report("bw-collapse", n_chunks, seed=7,
+                                forecast=True)
+        reactive = next((r for r in reports if r["preset"] == "bw-collapse"),
+                        None)
+        miss_r = reactive["ladder"]["deadline_misses"] if reactive else None
+        miss_f = fc_rep["ladder"]["deadline_misses"]
+        fc_rep["deadline_misses_vs_reactive"] = f"{miss_f}/{miss_r}"
+        reports.append(fc_rep)
+        print(f"{fc_rep['preset']},{fc_rep['wall_s']},"
+              f"{fc_rep['accounting_ok']},{fc_rep['recovery_ok']},"
+              f"misses:{miss_f}/{miss_r},holds:{fc_rep['forecast_holds']}")
+        if not fc_rep["accounting_ok"]:
+            errors.append("bw-collapse-forecast: accounting leak")
+        if fc_rep["queue_leaks"]:
+            errors.append(
+                f"bw-collapse-forecast: {fc_rep['queue_leaks']} queue leaks")
+        if not fc_rep["recovery_ok"]:
+            errors.append("bw-collapse-forecast: no recovery within K chunks")
+        if miss_r is not None and miss_r > 0 and miss_f >= miss_r:
+            errors.append(
+                f"bw-collapse-forecast: forecast did not lower deadline "
+                f"misses ({miss_f} vs reactive {miss_r})")
+    except Exception as e:
+        errors.append(f"bw-collapse-forecast: {type(e).__name__}: {e}")
     payload = {
         "schema": "biswift-chaos-v1",
         "smoke": SMOKE,

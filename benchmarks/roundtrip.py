@@ -112,6 +112,19 @@ def roundtrip_bench():
         derived += f";vs_f32_exhaustive:{ref / max(us_dia, 1e-9):.2f}x"
     rows.append((f"roundtrip_fused_{S_d}stream_diamond", us_dia, derived))
 
+    # ---- in-trace anchor-quality budget search (bench-adaptive): the
+    # masked ladder sweep + traced argmax vs the pinned-quality trace —
+    # the cost of making anchor quality adapt per chunk without retracing
+    import dataclasses
+    cfg_qs = dataclasses.replace(cfg, anchor_search=True)
+    S_q = variant_counts[-1]
+    us_qs = _timeit(lambda: fused_with(cfg_qs, S_q), n=3)
+    ref = f32_us.get(S_q)
+    derived = "in-trace-anchor-budget-search"
+    if ref:
+        derived += f";vs_pinned:{ref / max(us_qs, 1e-9):.2f}x"
+    rows.append((f"roundtrip_fused_{S_q}stream_qsearch", us_qs, derived))
+
     S = len(levels)
 
     def ladder():

@@ -2,6 +2,15 @@
 
 Anchors are delivered as high-definition stills whose quality factor is
 tuned so that anchors + video share the stream's allocated bandwidth.
+
+Budget search: the ladder probe (:func:`quality_for_budget`) and the
+traced masked sweep (:func:`ladder_sweep`, consumed by
+``repro.core.roundtrip``) both hoist the quality-INDEPENDENT half of the
+encode — level-shift, blockify, DCT — out of the per-rung loop: only the
+quantization table depends on the quality factor, so probing Q rungs
+costs one DCT, not Q.  Rung selection is one shared jnp expression
+(:func:`budget_rung`), so the host probe and the in-trace argmax pick
+the same rung by construction.
 """
 from __future__ import annotations
 
@@ -10,6 +19,10 @@ import jax.numpy as jnp
 from repro.codec import blockdct as B
 
 f32 = jnp.float32
+
+# the discrete anchor-quality ladder the budget search evaluates (ISSUE
+# 10); distinct from the legacy hybrid_encoder.ANCHOR_QUALITIES probe set
+ANCHOR_QUALITY_LADDER = (20.0, 35.0, 50.0, 65.0, 80.0, 92.0)
 
 
 def jpeg_encode_decode(img, quality):
@@ -28,14 +41,69 @@ def psnr(a, b, peak: float = 255.0):
     return 10.0 * jnp.log10(peak * peak / jnp.maximum(mse, 1e-9))
 
 
-def quality_for_budget(img, bit_budget, qualities=(20., 35., 50., 65., 80., 92.)):
+def _dct_blocks(img):
+    """Quality-independent half of the JPEG encode: level-shift,
+    blockify, DCT.  Computed ONCE per image and shared by every ladder
+    rung — the per-rung work is quantize + bit charge (+ the inverse
+    transform when a reconstruction is needed)."""
+    return B.dct2(B.blockify(img.astype(f32) - 128.0))
+
+
+def ladder_bits(img, qualities=ANCHOR_QUALITY_LADDER):
+    """(Q,) bit cost of ``img`` at every ladder rung, DCT hoisted.
+
+    Rung q's value is bit-exact vs ``jpeg_bits(img, qualities[q])`` —
+    identical op sequence on identical coefficients; only the redundant
+    per-rung DCT recompute is gone."""
+    coefs = _dct_blocks(img)
+    grid = (img.shape[0] // 8, img.shape[1] // 8)
+    return jnp.stack([
+        B.entropy_bits(B.quantize_with_table(coefs, B.quant_table(q)),
+                       grid=grid)
+        for q in qualities])
+
+
+def ladder_sweep(img, qualities=ANCHOR_QUALITY_LADDER):
+    """Encode ``img`` at EVERY ladder rung: (recons (Q, H, W), bits (Q,)).
+
+    Each rung's (recon, bits) pair is bit-exact vs
+    ``jpeg_encode_decode(img, qualities[q])``.  Static output shapes make
+    this the masked-sweep primitive of the in-trace budget search
+    (``repro.core.roundtrip``): content and budget never change the
+    trace, a traced argmax picks the rung afterwards."""
+    H, W = img.shape
+    coefs = _dct_blocks(img)
+    grid = (H // 8, W // 8)
+    recons, bits = [], []
+    for q in qualities:
+        qtab = B.quant_table(q)
+        qc = B.quantize_with_table(coefs, qtab)
+        bits.append(B.entropy_bits(qc, grid=grid))
+        rec = B.unblockify(B.idct2(B.dequantize(qc, qtab)), H, W) + 128.0
+        recons.append(jnp.clip(rec, 0.0, 255.0))
+    return jnp.stack(recons), jnp.stack(bits)
+
+
+def budget_rung(bits, bit_budget, qualities=ANCHOR_QUALITY_LADDER):
+    """Index of the highest rung whose bit cost fits the budget (0 when
+    none fit — the cheapest rung ships regardless, matching the legacy
+    host search).  Operates on the LAST axis of ``bits``, so the same
+    expression serves the host probe and the traced per-frame argmax."""
+    qs = jnp.asarray(qualities, f32)
+    ok = bits <= bit_budget
+    return jnp.where(ok.any(axis=-1),
+                     jnp.argmax(jnp.where(ok, qs, -1.0), axis=-1), 0)
+
+
+def quality_for_budget(img, bit_budget, qualities=ANCHOR_QUALITY_LADDER):
     """Highest JPEG quality whose bit cost fits the budget (vectorized probe).
 
     Mirrors the paper's camera-side adaptation: the hybrid encoder tunes the
     anchor quality factor to the bandwidth share chosen by the agent.
+    The DCT runs once (``ladder_bits``); the legacy probe re-encoded the
+    full image at every rung.
     """
     qs = jnp.asarray(qualities, f32)
-    bits = jnp.stack([jpeg_bits(img, q) for q in qualities])
-    ok = bits <= bit_budget
-    idx = jnp.where(ok.any(), jnp.argmax(jnp.where(ok, qs, -1.0)), 0)
+    bits = ladder_bits(img, qualities)
+    idx = budget_rung(bits, bit_budget, qualities)
     return qs[idx], bits[idx]

@@ -20,6 +20,15 @@ bit-exact (f32) against the per-stream oracle
 :meth:`BiLevelTrainer.run_chunk_loop` — actions, rewards, metrics and
 (after :meth:`BiLevelTrainer.flush`) parameters.  See docs/bilevel.md for
 the parity contract and jit-boundary rules.
+
+Predictive extension (PR 10): when ``EnvConfig.forecast`` is set, the env
+appends the :class:`repro.core.forecast.StreamForecaster` feature block
+(EWMA rate/dispersion/demand + periodic phase, ``forecast_dim(C)`` wide)
+to S_high, so the SAC controller conditions its allocations on forecast
+state.  The forecaster updates only inside ``env.step()`` (never in
+``observe_high``), so the widened state rides ``bilevel_step`` without
+touching the stacked-vs-loop parity contract; ``forecast=None`` keeps the
+state and every update bit-identical to pre-forecast builds.
 """
 from __future__ import annotations
 

@@ -23,17 +23,27 @@ separately-jitted halves stitched together by host Python:
     contract between the oracle and all three fused forms; the
     mesh-sharded twin is ``repro.distributed.stream_sharding.shard_roundtrip``.
 
-Static vs traced: the ladder rung (it fixes the LR shapes) and the anchor
-JPEG quality live in ``RoundtripConfig`` and are static jit arguments;
-thresholds (tr1, tr2), bandwidth and queue delay are traced scalars, so
-the controller can sweep them without recompiling.
+Static vs traced: the ladder rung (it fixes the LR shapes) lives in
+``RoundtripConfig`` and is a static jit argument; thresholds (tr1, tr2),
+bandwidth and queue delay are traced scalars, so the controller can
+sweep them without recompiling.  The anchor JPEG quality is EITHER
+static (``anchor_search=False``: pinned to ``cfg.anchor_quality``,
+byte-identical to the pre-search trace) OR traced
+(``anchor_search=True``: every frame is encoded at every rung of
+``ANCHOR_QUALITY_LADDER`` in one masked sweep with static shapes, bits
+are charged per rung through ``entropy_bits``, and a traced argmax picks
+the highest rung whose per-anchor share of the chunk's bandwidth budget
+fits — so ``bw_kbps`` can vary chunk-to-chunk without retracing).
 
 Semantics note vs ``hybrid_encoder.encode_hybrid``: the legacy host
 encoder searches the JPEG quality ladder and demotes anchors when the
 budget runs out — both data-dependent host decisions.  The fused round
-trip keeps the pure Eq. 3 classification and a config-pinned anchor
-quality so the whole chunk stays a single trace; anchor bits are charged
-through the same ``entropy_bits`` rate model.
+trip keeps the pure Eq. 3 classification inside the trace; with
+``anchor_search`` on, the quality search moves inside too (same budget
+arithmetic as ``encode_hybrid``: ``bw_kbps * 1000 * T/fps`` minus video
+bits, split evenly across anchors), leaving anchor demotion as the one
+remaining host-side decision.  Anchor bits are charged through the same
+``entropy_bits`` rate model either way.
 """
 from __future__ import annotations
 
@@ -45,7 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.codec import blockdct as B
-from repro.codec.image_codec import jpeg_encode_decode
+from repro.codec.image_codec import (ANCHOR_QUALITY_LADDER, budget_rung,
+                                     jpeg_encode_decode, ladder_sweep,
+                                     quality_for_budget)
 from repro.codec.rate_model import QUALITY_LADDER, downscale, ladder_lr_shape
 from repro.codec.video_codec import (VideoCodecConfig, _encode_chunk,
                                      _encode_ladder_batch, encode_chunk)
@@ -66,7 +78,11 @@ class RoundtripConfig:
     overridden by the rung's quality — set ``use_kernel``/``dtype`` there
     to pick the search variant.  ``roi`` (a ``repro.core.roi.RoiConfig``)
     turns on ROI-gated inference inside the fused trace: the detector
-    runs only on the top-K packed region patches."""
+    runs only on the top-K packed region patches.  ``anchor_search``
+    switches the anchor quality from the static ``anchor_quality`` pin to
+    the in-trace budget search over ``ANCHOR_QUALITY_LADDER`` (the flag
+    itself is static — off-mode traces are byte-identical to pre-search
+    builds; ``anchor_quality`` remains as the off-mode pin)."""
     level: int = 2
     codec: VideoCodecConfig = VideoCodecConfig()
     anchor_quality: float = 70.0
@@ -74,10 +90,24 @@ class RoundtripConfig:
     costs: PipelineCosts = PipelineCosts()
     fps: float = 30.0
     roi: object | None = None
+    anchor_search: bool = False
 
     def codec_for(self, level: int | None = None) -> VideoCodecConfig:
         ql = QUALITY_LADDER[self.level if level is None else level]
         return dataclasses.replace(self.codec, quality=ql.quality)
+
+
+def anchor_budget_bits(bw_kbps, video_bits, n_anchors, n_frames: int,
+                       fps: float):
+    """Per-anchor bit budget: the chunk's bandwidth allowance
+    (``bw_kbps * 1000 * T/fps``, the ``encode_hybrid`` arithmetic) minus
+    the video-layer bits, split evenly across the chunk's anchors.  All
+    of bw_kbps / video_bits / n_anchors may be traced — this is the
+    shared budget expression of the fused search and the host oracle, so
+    the two agree bit-for-bit by construction."""
+    chunk_bits = jnp.asarray(bw_kbps, f32) * 1000.0 * (n_frames / fps)
+    spare = jnp.maximum(chunk_bits - jnp.asarray(video_bits, f32), 0.0)
+    return spare / jnp.maximum(jnp.asarray(n_anchors, f32), 1.0)
 
 
 def _roundtrip_execute(raw, enc, lr_extent, gt_boxes, gt_valid,
@@ -93,14 +123,32 @@ def _roundtrip_execute(raw, enc, lr_extent, gt_boxes, gt_valid,
     video_bits = B.seq_sum(enc.bits)
     types, _, _ = classify_frames(enc.frame_diff / 255.0,
                                   enc.residual_mag / 255.0, tr1, tr2)
-    # JPEG-encode EVERY frame at the pinned anchor quality and mask to the
-    # type-1 plane: data-independent shapes keep the anchor pipeline
-    # inside the trace (the host path only encodes actual anchors)
-    jrec, jbits = jax.vmap(
-        lambda fr: jpeg_encode_decode(fr, cfg.anchor_quality))(raw)
     is1 = types == 1
+    T = raw.shape[0]
+    if cfg.anchor_search:
+        # masked ladder sweep: encode EVERY frame at EVERY rung (static
+        # shapes — neither content nor budget retraces), charge bits per
+        # rung, then a traced argmax picks each frame's highest rung that
+        # fits its even share of the chunk's spare bandwidth
+        sweep_rec, sweep_bits = jax.vmap(ladder_sweep)(raw)  # (T,Q,H,W),(T,Q)
+        n_anchors = B.seq_sum(jnp.where(is1, 1.0, 0.0))
+        per_anchor = anchor_budget_bits(bw_kbps, video_bits, n_anchors,
+                                        T, cfg.fps)
+        rung = budget_rung(sweep_bits, per_anchor)           # (T,)
+        jrec = jnp.take_along_axis(
+            sweep_rec, rung[:, None, None, None], axis=1)[:, 0]
+        jbits = jnp.take_along_axis(sweep_bits, rung[:, None], axis=1)[:, 0]
+        frame_q = jnp.asarray(ANCHOR_QUALITY_LADDER, f32)[rung]
+    else:
+        # JPEG-encode EVERY frame at the pinned anchor quality and mask to
+        # the type-1 plane: data-independent shapes keep the anchor
+        # pipeline inside the trace (the host path only encodes anchors)
+        jrec, jbits = jax.vmap(
+            lambda fr: jpeg_encode_decode(fr, cfg.anchor_quality))(raw)
+        frame_q = jnp.full((T,), cfg.anchor_quality, f32)
     anchor_hd = jnp.where(is1[:, None, None], jrec, 0.0)
     anchor_bits = B.seq_sum(jnp.where(is1, jbits, 0.0))
+    anchor_q = jnp.where(is1, frame_q, 0.0)
     total_bits = video_bits + anchor_bits
 
     out = _execute_chunk(enc, types, anchor_hd, gt_boxes, gt_valid,
@@ -108,7 +156,7 @@ def _roundtrip_execute(raw, enc, lr_extent, gt_boxes, gt_valid,
                          total_bits, cfg.costs, lr_extent=lr_extent,
                          roi=cfg.roi)
     out.update(types=types, video_bits=video_bits, anchor_bits=anchor_bits,
-               total_bits=total_bits)
+               total_bits=total_bits, anchor_q=anchor_q)
     return out
 
 
@@ -263,6 +311,9 @@ def roundtrip_ladder_batched(raw, gt_boxes, gt_valid, detector_params, *,
 # module-level jit: re-wrapping per call would retrace the JPEG encode
 # inside every oracle invocation and inflate the two-jit bench baseline
 _jpeg = jax.jit(jpeg_encode_decode)
+# static qualities so the probe's per-rung loop unrolls over the same
+# constants the fused sweep bakes in
+_q_for_budget = jax.jit(quality_for_budget, static_argnames=("qualities",))
 
 
 def roundtrip_oracle(raw, gt_boxes, gt_valid, detector_params, *, tr1, tr2,
@@ -283,12 +334,28 @@ def roundtrip_oracle(raw, gt_boxes, gt_valid, detector_params, *, tr1, tr2,
     types, _, _ = classify_frames(enc.frame_diff / 255.0,
                                   enc.residual_mag / 255.0, tr1, tr2)
     types_host = jax.device_get(types)
+    anchors = np.flatnonzero(types_host == 1)
+    T = raw.shape[0]
     anchor_hd = jnp.zeros_like(raw)
     anchor_bits = jnp.asarray(0.0, f32)
-    for i in np.flatnonzero(types_host == 1):
-        rec, bits = _jpeg(raw[i], cfg.anchor_quality)
-        anchor_hd = anchor_hd.at[i].set(rec)
-        anchor_bits = anchor_bits + bits
+    anchor_q = jnp.zeros((T,), f32)
+    if cfg.anchor_search:
+        # host-side twin of the traced search: probe the ladder per anchor
+        # with quality_for_budget against the same per-anchor budget share
+        per_anchor = anchor_budget_bits(bw_kbps, video_bits,
+                                        float(len(anchors)), T, cfg.fps)
+        for i in anchors:
+            q_i, _ = _q_for_budget(raw[i], per_anchor)
+            rec, bits = _jpeg(raw[i], q_i)
+            anchor_hd = anchor_hd.at[i].set(rec)
+            anchor_bits = anchor_bits + bits
+            anchor_q = anchor_q.at[i].set(q_i)
+    else:
+        for i in anchors:
+            rec, bits = _jpeg(raw[i], cfg.anchor_quality)
+            anchor_hd = anchor_hd.at[i].set(rec)
+            anchor_bits = anchor_bits + bits
+            anchor_q = anchor_q.at[i].set(cfg.anchor_quality)
     total_bits = video_bits + anchor_bits
     out = decode_execute_chunk(                                # jit #2
         enc, types, anchor_hd, gt_boxes, gt_valid, detector_params,
@@ -296,5 +363,5 @@ def roundtrip_oracle(raw, gt_boxes, gt_valid, detector_params, *, tr1, tr2,
         total_bits=total_bits, costs=cfg.costs, roi=cfg.roi)
     out = dict(out)
     out.update(types=types, video_bits=video_bits, anchor_bits=anchor_bits,
-               total_bits=total_bits)
+               total_bits=total_bits, anchor_q=anchor_q)
     return out

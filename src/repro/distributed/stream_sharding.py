@@ -33,7 +33,10 @@ program.  Mixed bitrate-ladder rungs are legal — the shard_map body is the
 post-downscale heterogeneous form, so per-stream extents/QPs travel as
 data while the shape-changing per-rung downscale stays outside the
 region.  Padded stream lanes carry FULL-canvas extents (not zeros) so
-their masked means never divide by zero.
+their masked means never divide by zero.  ``RoundtripConfig.anchor_search``
+rides through unchanged: the masked quality-ladder sweep is per-stream
+data-parallel like everything else, and the ``anchor_q`` output follows the
+same stream-leading out_specs as the rest of the result dict.
 """
 from __future__ import annotations
 

@@ -368,7 +368,8 @@ def _recovery_report(fps_norm: np.ndarray, disrupted: np.ndarray,
 
 
 def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
-             degrade=None, detector=None, batch_submit: bool = False) -> dict:
+             degrade=None, detector=None, batch_submit: bool = False,
+             forecast=None) -> dict:
     """Drive an :class:`EdgeRuntime` through ``n_chunks`` of churning,
     faulty streams and report accounting + recovery.
 
@@ -386,6 +387,15 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
     round is flushed as cross-stream padded batches and polled — the mode
     that scales the soak to O(100) concurrent streams.  The default keeps
     the chunk-sequential PR-6 behavior bit-for-bit.
+
+    ``forecast`` (a ``repro.core.forecast.ForecastConfig``) arms
+    PREDICTIVE admission: an EWMA forecaster tracks each stream's
+    observed rate, and a chunk whose modeled transmission time at
+    ``min(allocated, predicted)`` kbps would blow the deadline is
+    withheld (``EdgeRuntime.hold_chunk`` — pipeline-③ hold on the carry)
+    instead of transmitted into the collapse.  The reactive default
+    (``forecast=None``) transmits and discovers the miss after the fact
+    — behavior is byte-identical to pre-forecast builds.
 
     Everything that influences a decision is simulated/seeded, so two
     calls with the same inputs produce identical reports (minus wall
@@ -422,6 +432,12 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
                                        seed=cfg.seed), cfg.n_chunks)
     trace = apply_fault_profile(trace, schedule.bw_multipliers(cfg.n_chunks))
 
+    forecaster = None
+    if forecast is not None:
+        from repro.core.forecast import StreamForecaster
+        forecaster = StreamForecaster(forecast, C)
+    forecast_holds = 0
+
     def _group(c: int) -> int:
         return c % cfg.content_groups if cfg.content_groups else c
 
@@ -457,12 +473,26 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
             base = ladder_for_bandwidth(video_bandwidth_share(alloc))
             level = rt.suggest_level(c, base)
             pkt = packet_for(c, level, alloc)
+            if forecaster is not None:
+                # predictive admission: hold the chunk if the modeled
+                # transmission at min(allocated, EWMA-predicted) kbps
+                # would blow the deadline — don't transmit into a collapse
+                pred_kbps = min(alloc, float(forecaster.predict_bw()[c]))
+                t_tx = pkt.total_bits / max(pred_kbps * 1000.0, 1e-6)
+                if t_tx > degrade.deadline_s:
+                    tk = rt.hold_chunk(c, t, pkt)
+                    forecast_holds += 1
+                    round_.append(
+                        (c, tk if batch_submit else rt.poll(tk)[2], pkt))
+                    continue
             if batch_submit:
                 round_.append((c, rt.submit_chunk(c, t, pkt), pkt))
             else:
                 round_.append((c, rt.process_chunk(c, t, pkt)[2], pkt))
         if batch_submit:
             rt.flush()
+        obs_bits = np.zeros(C, np.float32)
+        obs_mask = np.zeros(C, bool)
         for c, item, pkt in round_:
             types = rt.poll(item)[2] if batch_submit else item
             st = rt.stats[c]
@@ -472,6 +502,14 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
             rt.note_chunk_latency(c, t, lat)
             delivered += st.last_delivered
             inferred += st.last_inferred
+            obs_bits[c] = bits
+            obs_mask[c] = True
+        if forecaster is not None:
+            # every participating stream observed its announced allocation
+            # (held ones too — the allocation is control-plane knowledge,
+            # and a frozen EWMA would never see the link recover)
+            forecaster.update(np.full(C, alloc, np.float32), obs_bits,
+                              mask=obs_mask)
         rt.poll_faults(t)
         depth = float(rt.queues.depths.sum())
         if depth:
@@ -503,5 +541,7 @@ def run_soak(cfg: SoakConfig, schedule: FaultSchedule, *,
         "fault_log": list(rt.fault_log),
         "active_shards_final": list(rt.active_shards),
         "hedged_dispatches": rt.hedged_dispatches,
+        "forecast_holds": forecast_holds,
+        "forecast_state": None if forecaster is None else forecaster.state(),
         "wall_s": wall,
     }

@@ -80,9 +80,9 @@ f32 = np.float32
 # ---------------------------------------------------------------------------
 # module-level jits — one trace per batch signature, shared by every runtime
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("hd_hw", "roi"))
+@partial(jax.jit, static_argnames=("hd_hw", "roi", "anchor_search"))
 def _stage_chunk(types, anchor_hd, recon, mv, residual_q, *, hd_hw,
-                 roi=None):
+                 roi=None, anchor_search=False):
     """Stage one chunk on device: upscale the LR video to analytics
     resolution, select each frame's execution plane (decoded HD anchor for
     type-1, upscaled LR for the rest), and upscale the motion vectors —
@@ -90,17 +90,25 @@ def _stage_chunk(types, anchor_hd, recon, mv, residual_q, *, hd_hw,
     static ``repro.core.roi.RoiConfig``) the relevance head also scores
     each HD region from the codec's macroblock statistics; the (T, R)
     flat scores ride the ticket so the detector dispatch can gate its
-    rows without re-deriving anything."""
+    rows without re-deriving anything.  With ``anchor_search`` on the
+    per-rung anchor bit planes (``ladder_bits`` over the HD anchor plane,
+    (T, Q)) ride along too — staged in this same async dispatch so a
+    downstream in-trace budget pick costs no extra host round trip."""
     H, W = hd_hw
     lr_up = upscale_nearest(recon, H, W)
     frames = jnp.where((types == 1)[:, None, None], anchor_hd, lr_up)
     mvs = _upscale_mvs(mv, (H, W))
+    rung_bits = None
+    if anchor_search:
+        from repro.codec.image_codec import ladder_bits
+        rung_bits = jax.vmap(ladder_bits)(anchor_hd)
     if roi is None:
-        return frames, mvs, None
+        return frames, mvs, None, rung_bits
     from repro.core.roi import region_grid, region_scores
     nry, nrx = region_grid(hd_hw, roi)
     scores = region_scores(mv, residual_q, recon.shape[1:], hd_hw, roi)
-    return frames, mvs, scores.reshape(types.shape[0], nry * nrx)
+    return (frames, mvs, scores.reshape(types.shape[0], nry * nrx),
+            rung_bits)
 
 
 @jax.jit
@@ -186,6 +194,9 @@ class ChunkTicket:
     frames_dev: jax.Array | None = None
     mvs_dev: jax.Array | None = None
     rscores_dev: jax.Array | None = None   # (T, R) ROI scores (roi mode)
+    # (T, Q) per-rung anchor bit planes (anchor_search mode) — small, so
+    # kept past dispatch for budget audits after poll
+    rung_bits_dev: jax.Array | None = None
     init_b: jax.Array | None = None
     init_s: jax.Array | None = None
     n_cells: int = 0
@@ -304,6 +315,7 @@ class EdgeRuntime:
             infer_jit = jax.jit(lambda p, payload: roi_infer(
                 p, det_cfg, roi, payload[0], payload[1]))
         self.roi = roi
+        self.anchor_search = bool(getattr(cfg, "anchor_search", False))
 
         def make_infer(params, dev=None):
             # staged batches are COMMITTED (jit outputs); an explicit
@@ -537,6 +549,29 @@ class EdgeRuntime:
                     np.zeros((T, n_cells), f32), tk.types)
         return tk
 
+    def hold_chunk(self, stream: int, t: int,
+                   packet: HybridPacket) -> ChunkTicket:
+        """Predictive admission: withhold a chunk the forecast says the
+        link cannot deliver inside the deadline, BEFORE transmitting it.
+        Same degradation semantics as an undeliverable chunk (pipeline-③
+        hold on the carried detections, frame-skip without a carry), but
+        entered proactively by the caller's bandwidth forecast rather
+        than reactively after a miss — no bits are charged and no
+        deadline penalty accrues.  Accounting mirrors ``submit_chunk``
+        (frames_in grows; the invariant frames_in == inferred + reused +
+        skipped holds)."""
+        self._t = t
+        st = self._stats(stream)
+        T = packet.types.shape[0]
+        st.chunks += 1
+        st.frames_in += T
+        st.last_penalty_s = 0.0
+        st.last_transmitted = False
+        st.last_delivered = st.last_inferred = st.last_skipped = 0
+        st.note(t, "forecast_hold",
+                "predicted bandwidth below deadline; chunk withheld")
+        return self._skip_chunk(stream, t, packet)
+
     # --------------------------------------------------- submit/flush/poll
     def submit_chunk(self, stream: int, t: int,
                      packet: HybridPacket) -> ChunkTicket:
@@ -604,16 +639,19 @@ class EdgeRuntime:
                 st.note(t, "reuse_chunk", "deep overload")
 
         # one async dispatch stages the whole chunk on device; values stay
-        # there until the poll boundary
-        frames_dev, mvs_dev, rscores_dev = _stage_chunk(
+        # there until the poll boundary (anchor_search additionally stages
+        # the per-rung bit planes in the SAME dispatch)
+        frames_dev, mvs_dev, rscores_dev, rung_bits_dev = _stage_chunk(
             jnp.asarray(types), jnp.asarray(packet.anchor_hd),
             jnp.asarray(enc.recon), jnp.asarray(enc.mv),
-            jnp.asarray(enc.residual_q), hd_hw=(H, W), roi=self.roi)
+            jnp.asarray(enc.residual_q), hd_hw=(H, W), roi=self.roi,
+            anchor_search=self.anchor_search)
 
         n_cells = (H // self.det_cfg.stride) * (W // self.det_cfg.stride)
         tk = ChunkTicket(stream, t, shard, types, (H, W),
                          frames_dev=frames_dev, mvs_dev=mvs_dev,
                          rscores_dev=rscores_dev,
+                         rung_bits_dev=rung_bits_dev,
                          init_b=None if prev is None else prev.last_boxes,
                          init_s=None if prev is None else prev.last_scores,
                          n_cells=n_cells)

@@ -45,6 +45,11 @@ class ServingConfig:
     # batch row onto its top-K active regions (scored at stage time from
     # the codec's macroblock statistics).  None = full-frame inference.
     roi: object | None = None
+    # in-trace anchor-quality budget search: when True the async stage
+    # step additionally stages the per-rung anchor bit planes
+    # (EdgeRuntime._stage_chunk) so a downstream budget pick needs no
+    # extra host round trip — submit stays non-blocking either way
+    anchor_search: bool = False
 
     @property
     def shard_capacity_fps(self) -> float:

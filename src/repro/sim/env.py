@@ -48,12 +48,19 @@ class EnvConfig:
     # queue delay is per-shard, so a hot shard only slows ITS streams
     n_shards: int = 1
     # detector backend: anchor JPEG quality pinned into the fused
-    # round-trip jit (static — the legacy host encoder searched it per
-    # chunk, which is a data-dependent decision the single trace avoids)
+    # round-trip jit (static; the off-mode pin when anchor_search is off)
     anchor_quality: float = 70.0
     # optional repro.core.roi.RoiConfig: gates the fused detector onto the
     # top-K active regions scored from the codec's macroblock statistics
     roi: object | None = None
+    # in-trace anchor-quality budget search (RoundtripConfig.anchor_search):
+    # the fused round trip picks each anchor's JPEG quality from the
+    # discrete ladder against its traced bandwidth share
+    anchor_search: bool = False
+    # optional repro.core.forecast.ForecastConfig: per-stream EWMA
+    # rate/content forecast features appended to the high-level state so
+    # the SAC controller can allocate ahead of demand instead of reactively
+    forecast: object | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -117,8 +124,13 @@ def low_alloc_offset(cfg: EnvConfig) -> int:
 
 def high_state_dim(cfg: EnvConfig) -> int:
     C = len(cfg.streams)
-    # num, size, residual, prev alloc, acc, anchor fraction  (paper §V-B)
-    return 6 * C
+    # num, size, residual, prev alloc, acc, anchor fraction  (paper §V-B),
+    # plus the forecast head's features when predictive control is on
+    base = 6 * C
+    if cfg.forecast is not None:
+        from repro.core.forecast import forecast_dim
+        base += forecast_dim(C)
+    return base
 
 
 class MultiStreamEnv:
@@ -143,6 +155,11 @@ class MultiStreamEnv:
         self._rng = np.random.default_rng(cfg.seed)
         self._chunk_cache = {}
         self._rt_cfg = None         # lazy RoundtripConfig (rungs are data)
+        if cfg.forecast is not None:
+            from repro.core.forecast import StreamForecaster
+            self.forecaster = StreamForecaster(cfg.forecast, self.C)
+        else:
+            self.forecaster = None
 
     @property
     def queues(self) -> np.ndarray:
@@ -229,9 +246,11 @@ class MultiStreamEnv:
             nums.append(valid[0].sum() / 40.0)
             sizes.append(boxes[0, :, 2:].mean() / sc.height)
             resid.append(np.abs(np.diff(frames, axis=0)).mean() / 255.0)
-        return np.concatenate([
-            nums, sizes, resid, self.prev_alloc, self.prev_acc,
-            self.prev_anchor_frac]).astype(f32)
+        parts = [nums, sizes, resid, self.prev_alloc, self.prev_acc,
+                 self.prev_anchor_frac]
+        if self.forecaster is not None:
+            parts.append(self.forecaster.features())
+        return np.concatenate(parts).astype(f32)
 
     # ------------------------------------------------------------------
     def step(self, proportions: np.ndarray, thresholds: np.ndarray):
@@ -301,6 +320,13 @@ class MultiStreamEnv:
         self.prev_acc = np.asarray([r["accuracy"] for r in results], f32)
         self.prev_anchor_frac = np.asarray(
             [r["n_anchor"] / cfg.chunk_frames for r in results], f32)
+        if self.forecaster is not None:
+            # fold this chunk's observed rate + achieved bits into the
+            # forecast head (updates live in step, never in observe, so
+            # observation is side-effect free on both control-plane paths)
+            self.forecaster.update(
+                np.asarray([r["bw_kbps"] for r in results], f32),
+                np.asarray([r["bits"] for r in results], f32))
         self.t += 1
         info = {"total_bw": total_bw, "alloc": alloc,
                 "queue_delay": queue_delay,
@@ -382,7 +408,8 @@ class MultiStreamEnv:
             _, det_cfg = self.detector
             self._rt_cfg = RoundtripConfig(
                 det_cfg=det_cfg, anchor_quality=self.cfg.anchor_quality,
-                fps=self.cfg.fps, roi=self.cfg.roi)
+                fps=self.cfg.fps, roi=self.cfg.roi,
+                anchor_search=self.cfg.anchor_search)
         return self._rt_cfg
 
     def _run_streams_roundtrip(self, alloc, thresholds,

@@ -1,0 +1,355 @@
+"""Budget-parity net for the in-trace anchor-quality search (ISSUE 10).
+
+Locks three contracts:
+
+  * selection parity — the traced argmax (``budget_rung``) picks the
+    SAME ladder rung as the host ``quality_for_budget`` probe across a
+    golden budget sweep (exact-boundary budgets included) and under
+    hypothesis-driven budgets, and chosen quality is monotone
+    non-decreasing in budget;
+  * sweep exactness — ``ladder_sweep``'s per-rung (recon, bits) planes
+    are bit-exact vs a per-rung ``jpeg_encode_decode`` Python loop, and
+    the hoisted-DCT probe runs ONE DCT for the whole ladder;
+  * mode parity — ``anchor_search=True`` through ``roundtrip_chunk`` /
+    ``roundtrip_batched`` / ``shard_roundtrip`` is bit-exact vs the
+    extended host oracle, ``anchor_search=False`` stays bit-exact vs the
+    pinned-quality path (fused, oracle, and the async serving plane),
+    and chunk-varying ``bw_kbps`` NEVER retraces the searched jit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.codec import blockdct as B
+from repro.codec.image_codec import (ANCHOR_QUALITY_LADDER, budget_rung,
+                                     jpeg_bits, jpeg_encode_decode,
+                                     ladder_bits, ladder_sweep,
+                                     quality_for_budget)
+from repro.core.roundtrip import (RoundtripConfig, roundtrip_batched,
+                                  roundtrip_chunk, roundtrip_oracle)
+from repro.models import detection as D
+from repro.sim.video_source import StreamConfig, generate_chunk
+
+f32 = jnp.float32
+H, W, T = 64, 96, 4
+QS = np.asarray(ANCHOR_QUALITY_LADDER, np.float32)
+
+
+@pytest.fixture(scope="module")
+def det():
+    cfg = D.TinyDetectorConfig()
+    return D.init(jax.random.PRNGKey(1), cfg), cfg
+
+
+@pytest.fixture(scope="module")
+def img():
+    frames, _, _ = generate_chunk(None, StreamConfig(height=H, width=W,
+                                                     n_objects=3, seed=3),
+                                  0, 1)
+    return jnp.asarray(frames[0], f32)
+
+
+def _streams(S):
+    data = [generate_chunk(None, StreamConfig(height=H, width=W,
+                                              n_objects=3, seed=s), 0, T)
+            for s in range(S)]
+    return (jnp.stack([d[0] for d in data]),
+            jnp.stack([d[1] for d in data]),
+            jnp.stack([d[2] for d in data]))
+
+
+def _host_pick(bits: np.ndarray, budget: float) -> int:
+    """Per-rung Python loop oracle: highest ladder rung fitting budget,
+    else the cheapest rung (index 0)."""
+    best = 0
+    for r in range(len(bits)):
+        if bits[r] <= budget and QS[r] >= QS[best if bits[best] <= budget
+                                             else r]:
+            best = r
+    return best if bits[best] <= budget else 0
+
+
+# ----------------------------------------------------- selection parity
+def test_budget_rung_matches_host_probe_golden_sweep(img):
+    """Traced argmax == host quality_for_budget across a golden sweep
+    including EXACT per-rung boundary budgets and budget < cheapest."""
+    bits = np.asarray(ladder_bits(img))
+    jit_rung = jax.jit(budget_rung)
+    budgets = ([0.0, float(bits.min()) - 1.0, float(bits.max()) + 1.0,
+                1e9] + [float(b) for b in bits]            # exact boundary
+               + [float(b) - 0.5 for b in bits]
+               + [float(b) + 0.5 for b in bits])
+    for budget in budgets:
+        traced = int(jit_rung(jnp.asarray(bits), budget))
+        q_host, b_host = quality_for_budget(img, budget)
+        assert QS[traced] == float(q_host), (budget, bits)
+        assert bits[traced] == float(b_host)
+        assert traced == _host_pick(bits, budget)
+
+
+def test_budget_rung_below_cheapest_ships_rung_zero(img):
+    bits = np.asarray(ladder_bits(img))
+    assert int(jax.jit(budget_rung)(jnp.asarray(bits), 0.0)) == 0
+    q, b = quality_for_budget(img, 0.0)
+    assert float(q) == QS[0] and float(b) == bits[0]
+
+
+def _golden_bits():
+    """Ladder bits of one seeded image, cached: the hypothesis shim's
+    runner takes no pytest fixtures."""
+    if not hasattr(_golden_bits, "_v"):
+        frames, _, _ = generate_chunk(
+            None, StreamConfig(height=H, width=W, n_objects=3, seed=3), 0, 1)
+        _golden_bits._v = np.asarray(ladder_bits(jnp.asarray(frames[0], f32)))
+    return _golden_bits._v
+
+
+@settings(max_examples=24)
+@given(b1=st.floats(min_value=0.0, max_value=3e5),
+       b2=st.floats(min_value=0.0, max_value=3e5))
+def test_budget_rung_property_matches_loop_oracle_and_monotone(b1, b2):
+    bits = _golden_bits()
+    r1 = int(budget_rung(jnp.asarray(bits), b1))
+    r2 = int(budget_rung(jnp.asarray(bits), b2))
+    assert r1 == _host_pick(bits, b1)
+    assert r2 == _host_pick(bits, b2)
+    lo, hi = (r1, r2) if b1 <= b2 else (r2, r1)
+    assert QS[lo] <= QS[hi], "chosen quality must be monotone in budget"
+
+
+def test_budget_rung_batched_rows_match_scalar(img):
+    """The last-axis form (the fused path's per-frame argmax) equals the
+    scalar form row by row."""
+    bits = np.asarray(ladder_bits(img))
+    tiled = jnp.stack([jnp.asarray(bits)] * 3)
+    budgets = jnp.asarray([0.0, float(bits[2]), 1e9], f32)
+    rows = budget_rung(tiled, budgets[:, None])
+    for i, budget in enumerate(np.asarray(budgets)):
+        assert int(rows[i]) == int(budget_rung(jnp.asarray(bits),
+                                               float(budget)))
+
+
+# ------------------------------------------------------- sweep exactness
+def test_ladder_sweep_bit_exact_vs_per_rung_loop(img):
+    recons, bits = ladder_sweep(img)
+    assert recons.shape == (len(QS), H, W) and bits.shape == (len(QS),)
+    for r, q in enumerate(ANCHOR_QUALITY_LADDER):
+        rec_ref, bits_ref = jpeg_encode_decode(img, q)
+        np.testing.assert_array_equal(np.asarray(recons[r]),
+                                      np.asarray(rec_ref), err_msg=f"q={q}")
+        np.testing.assert_array_equal(np.asarray(bits[r]),
+                                      np.asarray(bits_ref))
+
+
+def test_ladder_bits_bit_exact_vs_jpeg_bits(img):
+    bits = ladder_bits(img)
+    for r, q in enumerate(ANCHOR_QUALITY_LADDER):
+        np.testing.assert_array_equal(np.asarray(bits[r]),
+                                      np.asarray(jpeg_bits(img, q)))
+
+
+def test_quality_for_budget_runs_one_dct_for_whole_ladder(monkeypatch):
+    """Regression for the hoist: the probe used to re-encode the full
+    image (blockify + DCT) at every ladder quality; now the
+    quality-independent half runs ONCE and only quantize/bit-charge is
+    per rung."""
+    calls = []
+    orig = B.dct2
+    monkeypatch.setattr(B, "dct2", lambda x: (calls.append(1), orig(x))[1])
+    jax.eval_shape(lambda f: quality_for_budget(f, 5e4),
+                   jax.ShapeDtypeStruct((H, W), f32))
+    assert len(calls) == 1, \
+        f"dct2 ran {len(calls)}x for one {len(QS)}-rung probe"
+    monkeypatch.undo()
+
+
+# ----------------------------------------------------------- mode parity
+def _scalars(S):
+    return dict(tr1=jnp.full((S,), 0.05), tr2=jnp.full((S,), 0.1),
+                bw_kbps=jnp.asarray([900.0, 3000.0, 60.0, 8000.0][:S]),
+                queue_delay=jnp.zeros((S,)))
+
+
+def test_roundtrip_chunk_search_matches_extended_oracle(det):
+    params, det_cfg = det
+    cfg = RoundtripConfig(level=3, det_cfg=det_cfg, anchor_search=True)
+    raw, gtb, gtv = _streams(1)
+    for bw in (60.0, 900.0, 8000.0):
+        fused = roundtrip_chunk(raw[0], gtb[0], gtv[0], params, tr1=0.05,
+                                tr2=0.1, bw_kbps=bw, cfg=cfg)
+        oracle = roundtrip_oracle(raw[0], gtb[0], gtv[0], params, tr1=0.05,
+                                  tr2=0.1, bw_kbps=bw, cfg=cfg)
+        assert set(fused) == set(oracle)
+        for k in oracle:
+            np.testing.assert_array_equal(
+                np.asarray(fused[k]), np.asarray(oracle[k]),
+                err_msg=f"bw={bw}: key {k!r}")
+
+
+def test_roundtrip_batched_search_matches_oracle_lanes(det):
+    params, det_cfg = det
+    cfg = RoundtripConfig(level=3, det_cfg=det_cfg, anchor_search=True)
+    S = 3
+    raw, gtb, gtv = _streams(S)
+    sc = _scalars(S)
+    out = roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+    for s in range(S):
+        ref = roundtrip_oracle(
+            raw[s], gtb[s], gtv[s], params, tr1=float(sc["tr1"][s]),
+            tr2=float(sc["tr2"][s]), bw_kbps=float(sc["bw_kbps"][s]),
+            queue_delay=0.0, cfg=cfg)
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.asarray(out[k][s]), np.asarray(ref[k]),
+                err_msg=f"lane {s}: key {k!r}")
+
+
+def test_search_responds_to_bandwidth_and_charges_chosen_bits(det):
+    """Starved links pick the cheapest rung, rich links the best; the
+    charged anchor bits equal the chosen rungs' sweep bits."""
+    params, det_cfg = det
+    cfg = RoundtripConfig(level=3, det_cfg=det_cfg, anchor_search=True)
+    raw, gtb, gtv = _streams(1)
+    lo = roundtrip_chunk(raw[0], gtb[0], gtv[0], params, tr1=0.05, tr2=0.1,
+                         bw_kbps=30.0, cfg=cfg)
+    hi = roundtrip_chunk(raw[0], gtb[0], gtv[0], params, tr1=0.05, tr2=0.1,
+                         bw_kbps=50000.0, cfg=cfg)
+    anchors = np.asarray(lo["types"]) == 1
+    assert anchors.any()
+    assert (np.asarray(lo["anchor_q"])[anchors] == QS[0]).all()
+    assert (np.asarray(hi["anchor_q"])[anchors] == QS[-1]).all()
+    _, bits = jax.vmap(ladder_sweep)(jnp.asarray(raw[0], f32))
+    for out in (lo, hi):
+        aq = np.asarray(out["anchor_q"])
+        rungs = np.asarray([int(np.flatnonzero(QS == q)[0]) if q else 0
+                            for q in aq])
+        charged = np.asarray(bits)[np.arange(T), rungs]
+        total = B.seq_sum(jnp.where(jnp.asarray(anchors),
+                                    jnp.asarray(charged), 0.0))
+        np.testing.assert_array_equal(np.asarray(out["anchor_bits"]),
+                                      np.asarray(total))
+
+
+def test_search_off_bit_exact_vs_pinned_path(det):
+    """anchor_search=False must be indistinguishable from the pinned
+    config — same trace semantics, same outputs."""
+    params, det_cfg = det
+    pinned = RoundtripConfig(level=3, det_cfg=det_cfg)
+    off = dataclasses.replace(pinned, anchor_search=False)
+    raw, gtb, gtv = _streams(1)
+    a = roundtrip_chunk(raw[0], gtb[0], gtv[0], params, tr1=0.05, tr2=0.1,
+                        bw_kbps=3000.0, cfg=off)
+    b = roundtrip_chunk(raw[0], gtb[0], gtv[0], params, tr1=0.05, tr2=0.1,
+                        bw_kbps=3000.0, cfg=pinned)
+    for k in b:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=k)
+    anchors = np.asarray(b["types"]) == 1
+    np.testing.assert_array_equal(
+        np.asarray(b["anchor_q"]),
+        np.where(anchors, np.float32(pinned.anchor_quality),
+                 np.float32(0.0)))
+
+
+def test_shard_roundtrip_search_matches_batched(det):
+    """The mesh-sharded wrapper carries the search mode (and the new
+    anchor_q plane) through shard_map unchanged."""
+    from repro.distributed.sharding import SINGLE_POD_RULES
+    from repro.distributed.stream_sharding import shard_roundtrip
+    params, det_cfg = det
+    cfg = RoundtripConfig(level=3, det_cfg=det_cfg, anchor_search=True)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    raw, gtb, gtv = _streams(3)
+    sc = _scalars(3)
+    run = shard_roundtrip(mesh, SINGLE_POD_RULES, cfg=cfg)
+    out = run(raw, gtb, gtv, params, **sc)
+    ref = roundtrip_batched(raw, gtb, gtv, params, cfg=cfg, **sc)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]), err_msg=k)
+
+
+def test_search_zero_retrace_across_varying_bandwidth(det):
+    """The acceptance check: chunk-varying bw_kbps through the searched
+    trace compiles ONCE, while the picked rungs actually change."""
+    from repro.core.roundtrip import _roundtrip_chunk
+    params, det_cfg = det
+    cfg = RoundtripConfig(level=3, det_cfg=det_cfg, anchor_search=True)
+    raw, gtb, gtv = _streams(1)
+    traces = []
+
+    @jax.jit
+    def counted(r, gb, gv, p, bw):
+        traces.append(1)
+        return _roundtrip_chunk(r, gb, gv, p, 0.05, 0.1, bw, 0.0, cfg)
+
+    picks = []
+    for bw in (30.0, 300.0, 3000.0, 30000.0):
+        out = counted(raw[0], gtb[0], gtv[0], params, jnp.asarray(bw, f32))
+        picks.append(tuple(np.asarray(out["anchor_q"]).tolist()))
+    assert len(traces) == 1, f"retraced {len(traces)}x across bw values"
+    assert len(set(picks)) > 1, "rung picks never varied with bandwidth"
+
+
+def test_env_detector_backend_threads_anchor_search(det):
+    """EnvConfig.anchor_search reaches the fused dispatch: a starved
+    allocation and a rich one produce different anchor bit charges."""
+    from repro.sim.env import EnvConfig, MultiStreamEnv
+    from repro.sim.video_source import paper_stream_mix
+    params, det_cfg = det
+    outs = {}
+    for bw_scale in (1.0, 40.0):
+        from repro.sim.network import TraceConfig
+        cfg = EnvConfig(streams=tuple(paper_stream_mix(2, H, W)),
+                        chunk_frames=T, accuracy_backend="detector",
+                        anchor_search=True,
+                        trace=TraceConfig(mean_kbps=200.0 * bw_scale))
+        env = MultiStreamEnv(cfg, detector=(params, det_cfg))
+        assert env._roundtrip_cfg().anchor_search
+        results, _ = env.step(np.full(2, 0.5),
+                              np.full((2, 2), 0.05, np.float32))
+        outs[bw_scale] = sum(r["bits"] for r in results)
+    assert outs[1.0] < outs[40.0]
+
+
+def test_serving_stage_search_off_bit_exact_and_rung_bits_staged(det):
+    """The async serving plane: anchor_search staging changes NOTHING
+    about detections/stats (off-mode parity through serving) and the
+    staged (T, Q) rung-bit planes equal ladder_bits on the anchor
+    plane."""
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    params, det_cfg = det
+    frames, _, _ = generate_chunk(None, StreamConfig(height=32, width=48,
+                                                     n_objects=2, seed=5),
+                                  0, 3)
+    pkt = encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+    outs = {}
+    for search in (False, True):
+        scfg = ServingConfig(n_streams=1, anchor_search=search)
+        rt = EdgeRuntime(scfg, params, det_cfg)
+        tk = rt.submit_chunk(0, 0, pkt)
+        rt.flush()
+        boxes, scores, types = rt.poll(tk)
+        outs[search] = (np.asarray(boxes), np.asarray(scores),
+                        np.asarray(types), rt.stats[0].as_dict(), tk)
+        rt.close()
+    for a, b in zip(outs[False][:3], outs[True][:3]):
+        np.testing.assert_array_equal(a, b)
+    assert outs[False][3] == outs[True][3]
+    assert outs[False][4].rung_bits_dev is None
+    staged = outs[True][4].rung_bits_dev
+    assert staged is not None and staged.shape == (3, len(QS))
+    # close, not bit-equal: fused into the larger stage program XLA may
+    # reassociate the entropy_bits reduction (the bit-exact contract for
+    # the SEARCH path lives in the roundtrip parity tests above)
+    ref = jax.vmap(ladder_bits)(jnp.asarray(pkt.anchor_hd, f32))
+    np.testing.assert_allclose(np.asarray(staged), np.asarray(ref),
+                               rtol=1e-3)
+    assert (np.diff(np.asarray(staged), axis=1) >= 0).all(), \
+        "per-frame rung bits must be non-decreasing in quality"

@@ -1,0 +1,205 @@
+"""Forecast head determinism + predictive-admission coverage (ISSUE 10).
+
+The forecast layer must be boring in exactly the right ways: pure
+deterministic f32 numpy (seeded soak replays bit-identical), invisible
+when off (``forecast=None`` leaves every path byte-identical to
+pre-forecast builds — the bilevel parity half of that contract lives in
+``tests/test_rl_bilevel.py``), and strictly useful when on (fewer
+deadline misses than the reactive ladder under the ``bw-collapse``
+preset).
+"""
+import numpy as np
+import pytest
+
+from repro.core.forecast import (FEATURES_PER_STREAM, ForecastConfig,
+                                 StreamForecaster, forecast_dim)
+from repro.serving.faults import (SoakConfig, churn_schedule,
+                                  preset_schedule, run_soak)
+
+f32 = np.float32
+
+
+def _drive(fc: StreamForecaster, seed: int, n: int = 17):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        fc.update(rng.uniform(10.0, 9000.0, fc.n).astype(f32),
+                  rng.uniform(0.0, 2e5, fc.n).astype(f32))
+
+
+# ------------------------------------------------------------ determinism
+def test_forecaster_replay_bit_identical():
+    a, b = (StreamForecaster(ForecastConfig(), 4) for _ in range(2))
+    _drive(a, 9)
+    _drive(b, 9)
+    for k, va in a.state().items():
+        np.testing.assert_array_equal(va, b.state()[k], err_msg=k)
+    np.testing.assert_array_equal(a.features(), b.features())
+    np.testing.assert_array_equal(a.predict_bw(), b.predict_bw())
+
+
+def test_forecaster_shapes_dtypes_and_cold_start():
+    C = 3
+    fc = StreamForecaster(ForecastConfig(), C)
+    assert forecast_dim(C) == FEATURES_PER_STREAM * C
+    assert fc.features().shape == (forecast_dim(C),)
+    assert fc.features().dtype == f32
+    # cold streams predict +inf: no history must never cause a hold
+    assert np.isinf(fc.predict_bw()).all()
+    fc.update(np.full(C, 800.0, f32), np.zeros(C, f32))
+    np.testing.assert_array_equal(fc.predict_bw(), np.full(C, 800.0, f32))
+    assert np.isfinite(fc.features()).all()
+
+
+def test_forecaster_masked_update_leaves_unobserved_untouched():
+    fc = StreamForecaster(ForecastConfig(), 3)
+    fc.update(np.asarray([100.0, 200.0, 300.0], f32),
+              np.asarray([1e4, 2e4, 3e4], f32),
+              mask=np.asarray([True, False, True]))
+    assert fc.state()["warm"].tolist() == [True, False, True]
+    assert fc.rate[1] == 0.0
+    # an unwarmed stream still predicts +inf (must not hold on zeros)
+    assert np.isinf(fc.predict_bw()[1])
+    before = fc.state()
+    fc.update(np.full(3, 999.0, f32), np.full(3, 5e4, f32),
+              mask=np.zeros(3, bool))
+    for k in ("rate", "var", "demand", "warm"):
+        np.testing.assert_array_equal(fc.state()[k], before[k], err_msg=k)
+
+
+def test_forecaster_ewma_tracks_rate_and_variance():
+    fc = StreamForecaster(ForecastConfig(alpha=0.4), 1)
+    fc.update(np.asarray([1000.0], f32), np.asarray([0.0], f32))
+    assert fc.rate[0] == f32(1000.0) and fc.var[0] == 0.0
+    fc.update(np.asarray([2000.0], f32), np.asarray([0.0], f32))
+    assert fc.rate[0] == pytest.approx(1400.0)      # 1000 + .4 * 1000
+    assert fc.var[0] > 0.0                          # dispersion appeared
+    for _ in range(30):
+        fc.update(np.asarray([2000.0], f32), np.asarray([0.0], f32))
+    assert fc.rate[0] == pytest.approx(2000.0, rel=1e-3)
+    assert fc.var[0] == pytest.approx(0.0, abs=1.0)  # steady link converges
+
+
+# ------------------------------------------------------------ soak replay
+def test_churn_soak_forecast_state_replays_bit_identical():
+    cfg = SoakConfig(n_chunks=10, n_streams=4, chunk_frames=3, seed=11)
+    reports = []
+    for _ in range(2):
+        sched = churn_schedule(cfg.n_chunks, cfg.n_streams, seed=11)
+        reports.append(run_soak(cfg, sched, batch_submit=True,
+                                forecast=ForecastConfig()))
+    a, b = reports
+    assert a["forecast_state"] is not None
+    for k in ("rate", "var", "demand", "warm"):
+        np.testing.assert_array_equal(a["forecast_state"][k],
+                                      b["forecast_state"][k], err_msg=k)
+    assert a["forecast_state"]["t"] == b["forecast_state"]["t"]
+    assert a["forecast_holds"] == b["forecast_holds"]
+    assert a["stream_stats"] == b["stream_stats"]
+    assert a["accounting_ok"] and b["accounting_ok"]
+
+
+def test_soak_forecast_off_reports_no_forecast_fields():
+    cfg = SoakConfig(n_chunks=6, n_streams=2, chunk_frames=3, seed=3)
+    r = run_soak(cfg, churn_schedule(cfg.n_chunks, cfg.n_streams, seed=3),
+                 batch_submit=True)
+    assert r["forecast_state"] is None and r["forecast_holds"] == 0
+
+
+# ----------------------------------------------------- predictive admission
+def test_forecast_lowers_deadline_misses_under_bw_collapse():
+    """The acceptance mechanism: under the bw-collapse preset the
+    predictive gate holds chunks the link cannot deliver (pipeline-③
+    reuse) instead of transmitting into the outage, so deadline misses
+    drop strictly below the reactive ladder's — with recovery and
+    accounting intact."""
+    cfg = SoakConfig(n_chunks=12, n_streams=3, chunk_frames=3, seed=7)
+
+    def misses(r):
+        return sum(s["deadline_misses"] for s in r["stream_stats"].values())
+
+    sched = preset_schedule("bw-collapse", n_chunks=cfg.n_chunks, seed=7)
+    reactive = run_soak(cfg, sched, batch_submit=True)
+    forecast = run_soak(cfg, sched, batch_submit=True,
+                        forecast=ForecastConfig())
+    assert misses(reactive) > 0, "preset must actually stress the deadline"
+    assert misses(forecast) < misses(reactive)
+    assert forecast["forecast_holds"] > 0
+    assert forecast["accounting_ok"]
+    assert not forecast["queue_leaks"]
+    assert all(e["ok"] for e in forecast["recovery"] if "ok" in e)
+    assert all(e["ok"] for e in forecast["recovery_infer"] if "ok" in e)
+
+
+def test_hold_chunk_accounting_invariant():
+    """EdgeRuntime.hold_chunk keeps frames_in == inferred+reused+skipped
+    for both the carry (reuse-hold) and no-carry (frame-skip) branches."""
+    import jax
+    from repro.core.hybrid_encoder import encode_hybrid
+    from repro.models import detection as D
+    from repro.serving.runtime import EdgeRuntime
+    from repro.serving.scheduler import ServingConfig
+    from repro.sim.video_source import StreamConfig, generate_chunk
+    det_cfg = D.TinyDetectorConfig()
+    params = D.init(jax.random.PRNGKey(0), det_cfg)
+    frames, _, _ = generate_chunk(None, StreamConfig(height=32, width=48,
+                                                     n_objects=2, seed=5),
+                                  0, 3)
+    pkt = encode_hybrid(np.asarray(frames), 8000.0, 0.05, 0.1)
+    rt = EdgeRuntime(ServingConfig(n_streams=1), params, det_cfg)
+    # no carry yet: hold must frame-skip with explicit accounting
+    tk0 = rt.hold_chunk(0, 0, pkt)
+    assert tk0.done and (np.asarray(tk0.types) == 0).all()
+    # build a carry, then hold again: pipeline-③ reuse-hold
+    rt.submit_chunk(0, 1, pkt)
+    rt.flush()
+    tk2 = rt.hold_chunk(0, 2, pkt)
+    assert (np.asarray(tk2.types) == 3).all()
+    boxes, scores, _ = rt.poll(tk2)
+    assert boxes.shape[0] == 3
+    s = rt.stats[0].as_dict()
+    assert s["frames_in"] == 9
+    assert s["frames_in"] == s["frames_inferred"] + s["frames_reused"] \
+        + s["frames_skipped"]
+    assert not rt.stats[0].last_transmitted
+    rt.close()
+
+
+# ------------------------------------------------------------- env plumbing
+def test_env_high_state_widens_with_forecast():
+    from repro.sim.env import EnvConfig, MultiStreamEnv, high_state_dim
+    from repro.sim.video_source import paper_stream_mix
+    C = 3
+    streams = tuple(paper_stream_mix(C, 64, 96))
+    off = EnvConfig(streams=streams, chunk_frames=4)
+    on = EnvConfig(streams=streams, chunk_frames=4,
+                   forecast=ForecastConfig())
+    assert high_state_dim(off) == 6 * C
+    assert high_state_dim(on) == 6 * C + forecast_dim(C)
+    env_off, env_on = MultiStreamEnv(off), MultiStreamEnv(on)
+    assert env_off.observe_high().shape == (6 * C,)
+    s_on = env_on.observe_high()
+    assert s_on.shape == (high_state_dim(on),)
+    # before any step the appended features are the forecaster's zeros
+    # except the periodic phase column
+    np.testing.assert_array_equal(s_on[:6 * C], env_off.observe_high())
+    # one step folds rate/bits observations into the appended block
+    props = np.full(C, 1.0 / C)
+    thr = np.full((C, 2), 0.05, np.float32)
+    env_on.step(props, thr)
+    env_off.step(props, thr)
+    s2 = env_on.observe_high()
+    assert env_on.forecaster.t == 1
+    assert (env_on.forecaster.rate > 0).all()
+    np.testing.assert_array_equal(s2[:6 * C], env_off.observe_high())
+    assert not np.array_equal(s2[6 * C:], s_on[6 * C:])
+
+
+def test_env_forecast_off_state_unchanged():
+    from repro.sim.env import EnvConfig, MultiStreamEnv
+    from repro.sim.video_source import paper_stream_mix
+    cfg = EnvConfig(streams=tuple(paper_stream_mix(2, 64, 96)),
+                    chunk_frames=4)
+    env = MultiStreamEnv(cfg)
+    assert env.forecaster is None
+    env.step(np.full(2, 0.5), np.full((2, 2), 0.05, np.float32))
+    assert env.observe_high().shape == (12,)

@@ -260,6 +260,45 @@ def test_bilevel_mode_mixing_flushes_pending():
     np.testing.assert_array_equal(t_pure.low_buffer.a, t_mixed.low_buffer.a)
 
 
+def test_bilevel_forecast_widens_sac_state_and_keeps_parity():
+    """EnvConfig.forecast widens the SAC controller's state vector by
+    forecast_dim(C) (the forecaster's EWMA features ride S_high into
+    ``bilevel_step`` with no control-plane code change) and the
+    stacked-vs-loop contract stays bit-exact with the forecast ON —
+    both paths share env.step/observe_high, so the appended features
+    are identical chunk by chunk."""
+    from repro.core.forecast import ForecastConfig, forecast_dim
+    from repro.sim.env import high_state_dim
+    C = 2
+    t_loop = _mk_trainer(C, forecast=ForecastConfig())
+    t_stack = _mk_trainer(C, forecast=ForecastConfig())
+    dim = high_state_dim(t_loop.env.cfg)
+    assert dim == 6 * C + forecast_dim(C)
+    assert t_loop.controller.buffer.s.shape[1] == dim
+    h_loop, _ = _run(t_loop, 6, "loop")
+    h_stack, _ = _run(t_stack, 6, "stacked")
+    assert h_loop == h_stack
+    assert _tree_equal(t_loop.low_stack, t_stack.low_stack)
+    assert _tree_equal(t_loop.controller.agent, t_stack.controller.agent)
+    np.testing.assert_array_equal(t_loop.controller.buffer.s,
+                                  t_stack.controller.buffer.s)
+    # the forecast head actually observed the run on both paths
+    for tr in (t_loop, t_stack):
+        assert tr.env.forecaster is not None and tr.env.forecaster.t == 6
+    np.testing.assert_array_equal(t_loop.env.forecaster.rate,
+                                  t_stack.env.forecaster.rate)
+
+
+def test_bilevel_forecast_off_state_dim_unchanged():
+    """forecast=None (the default) keeps the SAC state at 6*C — the
+    reactive controller is byte-identical to pre-forecast builds."""
+    from repro.sim.env import high_state_dim
+    tr = _mk_trainer(3)
+    assert high_state_dim(tr.env.cfg) == 18
+    assert tr.env.forecaster is None
+    assert tr.controller.buffer.s.shape[1] == 18
+
+
 def test_bilevel_seeded_determinism():
     """Two fused runs from the same seed produce IDENTICAL chunk logs —
     catches host-side RNG leaks / dict-ordering nondeterminism in the
